@@ -1,0 +1,28 @@
+"""Paper Tables 4/5: error-robust selection (ERS) vs fixed last-k selection
+across Lagrange orders k=3..6.  Claim: ERS >= fixed everywhere, and fixed
+explodes at k=5,6 while ERS stays stable."""
+
+import jax
+
+from benchmarks import common as C
+
+
+def run() -> None:
+    mix = C.AnalyticMixture()
+    noisy = mix.noisy(0.03)
+    xT = jax.random.normal(jax.random.PRNGKey(0), (256, 16))
+    ref = C.reference_solution(mix.eps, xT)
+
+    for k in (3, 4, 5, 6):
+        for sel in ("fixed", "ers"):
+            for nfe in (10, 15, 20, 50):
+                x0 = C.solve(
+                    noisy, xT, "era", nfe,
+                    k=k, lam=5.0, selection=sel, error_norm="mean",
+                )
+                C.emit(f"table45/k{k}/{sel}/nfe{nfe}", 0.0,
+                       f"rmse={C.rmse(x0, ref):.5f}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,31 @@
+"""Paper Figs. 5/6: the error-aware power scale (delta_eps / lambda) vs
+constant power scales.  Claim: the adaptive scale matches or beats the best
+constant, without per-dataset tuning."""
+
+import jax
+
+from benchmarks import common as C
+
+
+def run() -> None:
+    mix = C.AnalyticMixture()
+    noisy = mix.noisy(0.03)
+    xT = jax.random.normal(jax.random.PRNGKey(0), (256, 16))
+    ref = C.reference_solution(mix.eps, xT)
+
+    for nfe in (10, 20):
+        for const in (0.5, 1.0, 2.0, 4.0, 8.0):
+            x0 = C.solve(noisy, xT, "era", nfe, k=3,
+                         selection="const", const_power=const,
+                         error_norm="mean")
+            C.emit(f"fig56/const{const}/nfe{nfe}", 0.0,
+                   f"rmse={C.rmse(x0, ref):.5f}")
+        for lam in (2.0, 5.0, 15.0):
+            x0 = C.solve(noisy, xT, "era", nfe, k=3, lam=lam,
+                         selection="ers", error_norm="mean")
+            C.emit(f"fig56/adaptive-lam{lam}/nfe{nfe}", 0.0,
+                   f"rmse={C.rmse(x0, ref):.5f}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,36 @@
+"""Paper Table 7: sampling wall time by solver and NFE.  Also isolates the
+solver overhead (Lagrange buffer + selection math) from network-eval time by
+timing against a zero-cost eps function."""
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks import common as C
+
+
+def run() -> None:
+    dlm, params, data, cfg = C.trained_model()
+    eps_fn = dlm.eps_fn(params)
+    xT = jax.random.normal(jax.random.PRNGKey(0), (8, 8, cfg.d_model))
+
+    for solver in ("ddim", "explicit_adams", "dpm_solver_fast", "era"):
+        for nfe in (15, 25, 50):
+            kw = {"k": 4} if solver == "era" else {}
+            fn = jax.jit(lambda x: C.solve(eps_fn, x, solver, nfe, **kw))
+            dt = C.timer(fn, xT)
+            C.emit(f"table7/{solver}/nfe{nfe}", dt * 1e6,
+                   f"wall_s={dt:.4f}")
+
+    # solver overhead alone: eps == identity (no network)
+    null_eps = lambda x, t: x
+    big = jax.random.normal(jax.random.PRNGKey(1), (4, 256, 256))
+    for solver in ("ddim", "era"):
+        kw = {"k": 4} if solver == "era" else {}
+        fn = jax.jit(lambda x: C.solve(null_eps, x, solver, 20, **kw))
+        dt = C.timer(fn, big)
+        C.emit(f"table7/overhead/{solver}/nfe20", dt * 1e6,
+               f"per_step_us={dt / 20 * 1e6:.1f}")
+
+
+if __name__ == "__main__":
+    run()

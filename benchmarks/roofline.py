@@ -1,0 +1,159 @@
+"""Roofline analysis (deliverable g): derive compute / memory / collective
+terms per (arch x shape x mesh) from the dry-run artifacts.
+
+    compute term    = loop-aware HLO dot FLOPs / peak_FLOPs        [s]
+    memory term     = modeled HBM bytes / HBM_bw                   [s]
+    collective term = collective bytes / (links x ICI_bw)          [s]
+
+All quantities are per device (the compiled module is the per-device SPMD
+program).  Modeled HBM bytes = dot operand/result traffic + argument bytes
+(params/optimizer/cache read+write) — the unfused raw byte count from CPU
+HLO is reported alongside as an upper bound (TPU XLA fuses elementwise
+chains; CPU HLO text does not reflect that).
+
+MODEL_FLOPS uses 6*N*D (dense) / 6*N_active*D (MoE) for train (fwd+bwd),
+2*N*D for single forwards, so MODEL/HLO ratio ~1/1.33 signals an efficient
+program for inference/train (train has +remat recompute => expect ~0.75).
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from repro.configs import INPUT_SHAPES, get_config
+from repro.launch.mesh import HBM_BW, ICI_BW_PER_LINK, PEAK_FLOPS_BF16
+from repro.models import build_model
+
+ART = os.path.join(os.path.dirname(__file__), "..", "artifacts", "dryrun")
+ART_OPT = os.path.join(os.path.dirname(__file__), "..", "artifacts", "dryrun_opt")
+ICI_LINKS = 4  # 2D torus on v5e: 4 links per chip
+
+
+def active_param_fraction(cfg) -> float:
+    """Fraction of FFN params active per token (MoE top-k routing)."""
+    if cfg.moe is None:
+        return 1.0
+    m = cfg.moe
+    total_ff = m.num_experts + m.num_shared
+    active_ff = m.top_k + m.num_shared
+    # approximate: FFN params dominate expert-parallel archs
+    model = build_model(cfg)
+    n = model.param_count()
+    ffn_per_layer = 3 * cfg.d_model * m.d_ff_expert
+    routed = cfg.num_layers * m.num_experts * ffn_per_layer
+    active = n - routed + cfg.num_layers * m.top_k * ffn_per_layer
+    return active / n
+
+
+def matmul_param_count(cfg) -> int:
+    """Params participating in matmuls (excludes lookup-only tables like
+    Whisper's 524k-position embedding, which would inflate 6ND)."""
+    from repro.models.model import model_specs
+    from repro.models import layers as L
+
+    specs = model_specs(cfg)
+    total = L.count_params(specs)
+    if "pos_embed" in specs:
+        import math
+        total -= math.prod(specs["pos_embed"].shape)
+    return total
+
+
+def model_flops(cfg, shape, n_params: int) -> float:
+    """Analytic 'useful' FLOPs for the whole step (global)."""
+    frac = active_param_fraction(cfg)
+    n_active = n_params * frac
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 8.0 * n_active * tokens  # fwd+bwd+remat-extra-fwd ~ 8ND
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens
+    tokens = shape.global_batch  # one token per sequence
+    return 2.0 * n_active * tokens
+
+
+def load_records(mesh: str = "single", art: str | None = None) -> list[dict]:
+    recs = []
+    for path in sorted(glob.glob(os.path.join(art or ART, f"*__{mesh}.json"))):
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def analyze_record(rec: dict) -> dict | None:
+    if not rec.get("ok") or "hlo" not in rec:
+        return None
+    cfg = get_config(rec["arch"])
+    shape = INPUT_SHAPES[rec["shape"]]
+    n_dev = rec["num_devices"]
+    hlo = rec["hlo"]
+    ma = rec.get("memory_analysis", {})
+
+    flops_dev = hlo["flops"]
+    arg_bytes = ma.get("argument_size_in_bytes", 0) + ma.get(
+        "output_size_in_bytes", 0
+    )
+    hbm_model = hlo.get("dot_bytes", 0.0) + arg_bytes
+    coll_bytes = hlo.get("collective_bytes_total", 0.0)
+
+    compute_t = flops_dev / PEAK_FLOPS_BF16
+    memory_t = hbm_model / HBM_BW
+    coll_t = coll_bytes / (ICI_LINKS * ICI_BW_PER_LINK)
+    terms = {"compute": compute_t, "memory": memory_t, "collective": coll_t}
+    dominant = max(terms, key=terms.get)
+
+    n_params = matmul_param_count(cfg)
+    mf = model_flops(cfg, shape, n_params) / n_dev
+    ratio = mf / flops_dev if flops_dev else float("nan")
+
+    temp = ma.get("temp_size_in_bytes", 0)
+    fits = (temp + ma.get("argument_size_in_bytes", 0)) <= 16e9
+
+    return {
+        "arch": rec["arch"],
+        "shape": rec["shape"],
+        "mesh": rec["mesh"],
+        "entry": rec["entry"],
+        "compute_s": compute_t,
+        "memory_s": memory_t,
+        "collective_s": coll_t,
+        "dominant": dominant,
+        "model_flops_per_dev": mf,
+        "hlo_flops_per_dev": flops_dev,
+        "useful_ratio": ratio,
+        "temp_gb": temp / 1e9,
+        "args_gb": ma.get("argument_size_in_bytes", 0) / 1e9,
+        "fits_16gb": fits,
+        "hbm_raw_bytes": hlo.get("hbm_bytes", 0.0),
+        "collectives": hlo.get("collectives", {}),
+    }
+
+
+def run(mesh: str = "single") -> list[dict]:
+    rows = []
+    variants = [("baseline", ART)]
+    if glob.glob(os.path.join(ART_OPT, f"*__{mesh}.json")):
+        variants.append(("optimized", ART_OPT))
+    for label, art in variants:
+        for rec in load_records(mesh, art):
+            row = analyze_record(rec)
+            if row is None:
+                print(f"roofline-{label}/{rec.get('arch')}/{rec.get('shape')},0.0,MISSING")
+                continue
+            row["variant"] = label
+            rows.append(row)
+            print(
+                f"roofline-{label}/{row['arch']}/{row['shape']},0.0,"
+                f"compute_s={row['compute_s']:.3e};memory_s={row['memory_s']:.3e};"
+                f"collective_s={row['collective_s']:.3e};dominant={row['dominant']};"
+                f"useful={row['useful_ratio']:.2f};temp_gb={row['temp_gb']:.1f};"
+                f"fits={row['fits_16gb']}"
+            )
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,71 @@
+"""Compare every registered solver on one pretrained denoiser — the
+paper's Tables 1-3 in miniature, printed as a table.
+
+    PYTHONPATH=src python examples/compare_solvers.py --nfes 5 10 20
+"""
+
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.core import (
+    ERAConfig,
+    default_config,
+    get_solver,
+    linear_schedule,
+    solver_names,
+)
+from repro.data import DataConfig, GaussianMixtureLatents
+from repro.models import build_model
+from repro.models.diffusion import DiffusionLM
+from repro.training import OptimizerConfig, make_diffusion_train_step, train
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--nfes", type=int, nargs="+", default=[5, 10, 20])
+    ap.add_argument("--train-steps", type=int, default=100)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_config("llama3.2-1b", smoke=True)
+    dlm = DiffusionLM(build_model(cfg))
+    sched = linear_schedule()
+    dc = DataConfig(vocab_size=1, seq_len=8, batch_size=16, kind="diffusion",
+                    d_model=cfg.d_model, num_modes=2, seed=3)
+    step = make_diffusion_train_step(
+        dlm, OptimizerConfig(lr=2e-3, total_steps=args.train_steps), sched
+    )
+    res = train(step, dlm.init(jax.random.PRNGKey(args.seed)),
+                GaussianMixtureLatents(dc).batches(), args.train_steps,
+                log_every=1000, print_fn=lambda s: None)
+    eps_fn = dlm.eps_fn(res.params)
+
+    xT = jax.random.normal(jax.random.PRNGKey(7), (64, 8, cfg.d_model))
+    ref = get_solver("ddim")(eps_fn, xT, sched,
+                             default_config("ddim", nfe=600)).x0
+
+    print(f"{'solver':22s} " + " ".join(f"NFE={n:<3d}" for n in args.nfes))
+    for name in solver_names():
+        row = []
+        for nfe in args.nfes:
+            conf = (ERAConfig(nfe=nfe, k=3, error_norm="mean")
+                    if name == "era" else default_config(name, nfe=nfe))
+            try:
+                x0 = get_solver(name)(eps_fn, xT, sched, conf).x0
+                row.append(f"{float(jnp.sqrt(jnp.mean((x0-ref)**2))):.4f}")
+            except ValueError as e:  # nfe < k etc.
+                row.append("  n/a ")
+        print(f"{name:22s} " + " ".join(f"{r:>7s}" for r in row))
+    print("\n(RMSE to a 600-step DDIM reference on the same trained model; "
+          "lower is better)")
+
+
+if __name__ == "__main__":
+    main()

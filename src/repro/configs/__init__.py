@@ -1,0 +1,15 @@
+from repro.configs.base import (
+    FrontendStub,
+    MLAConfig,
+    ModelConfig,
+    MoEConfig,
+    SSMConfig,
+)
+from repro.configs.registry import (
+    ALIASES,
+    INPUT_SHAPES,
+    InputShape,
+    arch_names,
+    get_config,
+    long_context_policy,
+)

@@ -1,0 +1,35 @@
+"""ERA-Solver core: diffusion ODE solvers (the paper's contribution).
+
+Public API:
+    get_solver(name)                 -> sampling function
+    SolverConfig / ERAConfig         -> solver options
+    NoiseSchedule / get_schedule     -> VP noise schedules
+    timesteps                        -> solver time grids
+"""
+
+from repro.core.era import ERAConfig, era_combine
+from repro.core.registry import default_config, get_solver, solver_names
+from repro.core.schedules import (
+    NoiseSchedule,
+    cosine_schedule,
+    get_schedule,
+    linear_schedule,
+    timesteps,
+)
+from repro.core.solver_base import SolverConfig, SolverOutput, ddim_step
+
+__all__ = [
+    "ERAConfig",
+    "NoiseSchedule",
+    "SolverConfig",
+    "SolverOutput",
+    "cosine_schedule",
+    "ddim_step",
+    "default_config",
+    "era_combine",
+    "get_schedule",
+    "get_solver",
+    "linear_schedule",
+    "solver_names",
+    "timesteps",
+]

@@ -1,0 +1,43 @@
+"""DDIM sampler (Song et al. 2020a) — the order-1 diffusion-ODE baseline.
+
+Deterministic (eta = 0) DDIM is exactly Euler on the diffusion ODE in the
+(alpha, sigma)-parameterization; the paper's Eq. 8.  1 NFE per step.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.schedules import NoiseSchedule, timesteps
+from repro.core.solver_base import (
+    EpsFn,
+    SolverConfig,
+    SolverOutput,
+    ddim_step,
+    trajectory_append,
+    trajectory_init,
+)
+
+
+def sample(
+    eps_fn: EpsFn,
+    x_init: jax.Array,
+    schedule: NoiseSchedule,
+    config: SolverConfig,
+) -> SolverOutput:
+    n = config.nfe
+    ts = timesteps(schedule, n, config.scheme, t_end=config.t_end)
+    traj = trajectory_init(x_init, n, config.return_trajectory)
+
+    def body(i, carry):
+        x, traj = carry
+        t_cur, t_next = ts[i], ts[i + 1]
+        eps = eps_fn(x, t_cur)
+        x = ddim_step(schedule, x, eps, t_cur, t_next)
+        traj = trajectory_append(traj, i + 1, x)
+        return (x, traj)
+
+    x, traj = jax.lax.fori_loop(0, n, body, (x_init, traj))
+    aux = {"trajectory": traj} if traj is not None else {}
+    return SolverOutput(x0=x, nfe=jnp.int32(n), aux=aux)

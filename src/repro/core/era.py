@@ -1,0 +1,214 @@
+"""ERA-Solver (the paper's contribution, Algorithm 1).
+
+Implicit-Adams (Adams--Moulton order 4) corrector whose unobserved term is
+predicted by a Lagrange interpolation over an error-robustly selected subset
+of previously observed network noises.  1 NFE per step (like DDIM), high
+order (like implicit Adams), robust to noise-estimation error (the ERS
+strategy).
+
+Structure of one step i (i >= k-1; the first k-1 steps are DDIM warmup while
+the Lagrange buffer fills):
+
+  1. select bases  tau_{1..k}  via ERS (Eq. 16/17) using delta_eps
+  2. predict       eps_bar_{i+1} = L_eps(t_{i+1})            (Eq. 13/14)
+  3. correct       eps_ti = (9 eps_bar_{i+1} + 19 eps_i - 5 eps_{i-1}
+                             + eps_{i-2}) / 24               (Eq. 11)
+  4. x-update      x_{i+1} = DDIM(x_i, eps_ti)               (Eq. 8)
+  5. observe       eps_{i+1} = eps_theta(x_{i+1}, t_{i+1})   (1 NFE)
+  6. measure       delta_eps = || eps_{i+1} - eps_bar_{i+1} ||_2   (Eq. 15)
+
+The final iteration skips step 5/6 (the sample is finished), so a run with N
+steps costs exactly N NFE (1 initial eval + N-1 in-loop evals).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import lagrange
+from repro.core.schedules import NoiseSchedule, timesteps
+from repro.core.solver_base import (
+    EpsFn,
+    SolverConfig,
+    SolverOutput,
+    buffer_append,
+    buffer_init,
+    ddim_step,
+    trajectory_append,
+    trajectory_init,
+)
+
+Array = jax.Array
+
+# Adams--Moulton order-4 corrector coefficients (paper Eq. 10/11).
+AM4 = (9.0 / 24.0, 19.0 / 24.0, -5.0 / 24.0, 1.0 / 24.0)
+
+
+@dataclasses.dataclass(frozen=True)
+class ERAConfig(SolverConfig):
+    """ERA-Solver options (defaults follow the paper's main setting)."""
+
+    k: int = 4                     # Lagrange interpolation order
+    lam: float = 5.0               # power-scale hyperparameter (Eq. 17)
+    selection: str = "ers"         # "ers" | "fixed" | "const"
+    const_power: float = 1.0       # used when selection == "const"
+    error_norm: str = "global"     # "global" (Eq. 15) | "mean" (per-sample mean)
+    use_fused_update: bool = False # route step 2-4 through the Pallas kernel
+    # beyond-paper: independent delta_eps + base selection per batch element
+    # (the paper shares one scalar across the batch)
+    per_sample: bool = False
+
+
+def _delta_eps(e_obs: Array, e_pred: Array, mode: str) -> Array:
+    d = (e_obs - e_pred).astype(jnp.float32)
+    if mode == "global":
+        return jnp.linalg.norm(d.reshape(-1))
+    if mode == "mean":  # per-sample L2, averaged — batch-size invariant
+        return jnp.mean(jnp.sqrt(jnp.sum(d.reshape(d.shape[0], -1) ** 2, -1)))
+    raise ValueError(f"unknown error_norm {mode!r}")
+
+
+def _delta_eps_batch(e_obs: Array, e_pred: Array) -> Array:
+    """Per-sample L2 errors, (B,)."""
+    d = (e_obs - e_pred).astype(jnp.float32)
+    return jnp.sqrt(jnp.sum(d.reshape(d.shape[0], -1) ** 2, -1))
+
+
+def era_combine(
+    eps_sel: Array,      # (k, *x) selected buffer noises
+    t_sel: Array,        # (k,) their times
+    e_hist: Array,       # (3, *x) eps at steps i, i-1, i-2
+    t_next: Array,
+) -> tuple[Array, Array]:
+    """Predictor + corrector combine: returns (eps_bar_next, eps_corr).
+
+    Kept as a standalone function so the Pallas fused kernel
+    (repro.kernels.era_update) can be validated against it and swapped in.
+    """
+    eps_bar = lagrange.interpolate(eps_sel, t_sel, t_next)
+    c0, c1, c2, c3 = AM4
+    eps_corr = c0 * eps_bar + c1 * e_hist[0] + c2 * e_hist[1] + c3 * e_hist[2]
+    return eps_bar, eps_corr
+
+
+def sample(
+    eps_fn: EpsFn,
+    x_init: Array,
+    schedule: NoiseSchedule,
+    config: ERAConfig,
+) -> SolverOutput:
+    n = config.nfe
+    k = config.k
+    if n < k:
+        raise ValueError(f"ERA-Solver needs nfe >= k ({n} < {k})")
+    ts = timesteps(schedule, n, config.scheme, t_end=config.t_end)
+    dt = config.solver_dtype
+
+    if config.use_fused_update:
+        from repro.kernels import ops as _kops  # deferred; optional dep
+
+        combine = functools.partial(_kops.era_combine, am4=AM4)
+    else:
+        combine = era_combine
+
+    x = x_init.astype(dt)
+    eps_buf, t_buf = buffer_init(x, n + 1, dt)
+    # Alg. 1 line 2/3: delta_eps initialized to lambda (power = 1, uniform
+    # selection); initial observation appended at index 0.
+    e0 = eps_fn(x, ts[0]).astype(dt)
+    eps_buf, t_buf = buffer_append(eps_buf, t_buf, jnp.int32(0), e0, ts[0])
+    delta_eps = (
+        jnp.full((x.shape[0],), config.lam, jnp.float32)
+        if config.per_sample
+        else jnp.float32(config.lam)
+    )
+    traj = trajectory_init(x, n, config.return_trajectory)
+    de_hist = jnp.zeros((n,), jnp.float32)  # Fig. 3 diagnostic
+
+    def warm_branch(ops):
+        x, eps_buf, t_buf, de, i, t_cur, t_next = ops
+        e_cur = jax.lax.dynamic_index_in_dim(eps_buf, i, 0, keepdims=False)
+        x_next = ddim_step(schedule, x, e_cur, t_cur, t_next)
+        return x_next, e_cur  # prediction placeholder: the DDIM-held noise
+
+    def main_branch(ops):
+        x, eps_buf, t_buf, de, i, t_cur, t_next = ops
+        e_hist = jnp.stack(
+            [
+                jax.lax.dynamic_index_in_dim(eps_buf, i - j, 0, keepdims=False)
+                for j in range(3)
+            ]
+        )
+        if config.per_sample:
+            # beyond-paper: each batch element selects its own bases from
+            # its own measured error
+            tau = jax.vmap(
+                lambda d: lagrange.select_bases(
+                    i, k, d, config.lam, config.selection, config.const_power
+                )
+            )(de)                                            # (B, k)
+            t_sel = jnp.take(t_buf, tau, axis=0)             # (B, k)
+            # per-sample gather from the (cap, B, ...) buffer
+            eps_sel = jax.vmap(
+                lambda tau_b, buf_b: jnp.take(buf_b, tau_b, axis=0),
+                in_axes=(0, 1),
+                out_axes=1,
+            )(tau, eps_buf)                                  # (k, B, ...)
+            w = jax.vmap(lagrange.lagrange_weights, in_axes=(0, None))(
+                t_sel, t_next
+            )                                                # (B, k)
+            wb = w.T.reshape((k,) + (eps_sel.shape[1],) + (1,) * (eps_sel.ndim - 2))
+            eps_bar = jnp.sum(wb.astype(eps_sel.dtype) * eps_sel, axis=0)
+            c0, c1, c2, c3 = AM4
+            eps_corr = (
+                c0 * eps_bar + c1 * e_hist[0] + c2 * e_hist[1] + c3 * e_hist[2]
+            )
+        else:
+            tau = lagrange.select_bases(
+                i, k, de, config.lam, config.selection, config.const_power
+            )
+            t_sel = jnp.take(t_buf, tau, axis=0)
+            eps_sel = jnp.take(eps_buf, tau, axis=0)
+            eps_bar, eps_corr = combine(eps_sel, t_sel, e_hist, t_next)
+        x_next = ddim_step(schedule, x, eps_corr, t_cur, t_next)
+        return x_next, eps_bar
+
+    def body(i, carry):
+        x, eps_buf, t_buf, de, traj, de_hist = carry
+        t_cur, t_next = ts[i], ts[i + 1]
+        ops = (x, eps_buf, t_buf, de, i, t_cur, t_next)
+        x_next, eps_bar = jax.lax.cond(i < k - 1, warm_branch, main_branch, ops)
+
+        # Observe eps at the new point — except on the final step, whose
+        # x_next is the output (keeps total cost at exactly `nfe` evals).
+        def observe(_):
+            e_new = eps_fn(x_next, t_next).astype(dt)
+            if config.per_sample:
+                de_new = _delta_eps_batch(e_new, eps_bar)
+            else:
+                de_new = _delta_eps(e_new, eps_bar, config.error_norm)
+            return e_new, de_new
+
+        def skip(_):
+            return jnp.zeros_like(x_next), de
+
+        e_new, de_new = jax.lax.cond(i + 1 < n, observe, skip, None)
+        # Alg. 1 line 16: delta_eps only updates once predictions are real.
+        de = jnp.where(i >= k - 1, de_new, de)
+        de_hist = de_hist.at[i].set(jnp.mean(de))
+        eps_buf, t_buf = buffer_append(eps_buf, t_buf, i + 1, e_new, t_next)
+        traj = trajectory_append(traj, i + 1, x_next)
+        return (x_next, eps_buf, t_buf, de, traj, de_hist)
+
+    x, eps_buf, t_buf, delta_eps, traj, de_hist = jax.lax.fori_loop(
+        0, n, body, (x, eps_buf, t_buf, delta_eps, traj, de_hist)
+    )
+    aux: dict[str, Any] = {"delta_eps_history": de_hist}
+    if traj is not None:
+        aux["trajectory"] = traj
+    return SolverOutput(x0=x.astype(x_init.dtype), nfe=jnp.int32(n), aux=aux)

@@ -1,0 +1,104 @@
+"""Lagrange-interpolation predictor and error-robust selection (paper Sec. 3.2/3.3).
+
+The predictor interpolates k previously observed network noises
+{(t_tau_m, eps_theta(x_tau_m))} and evaluates the interpolant at t_{i+1}
+(Eq. 13/14).  The *error-robust selection* (ERS, Eq. 16/17) chooses WHICH k
+buffer entries become interpolation bases: k indices initialized uniformly
+over the buffer are pushed toward the (more accurate) early part of the
+buffer by a power function parameterized by the measured prediction error
+delta_eps.
+
+TPU adaptation: indices are computed as on-device scalars (no host sync) and
+deduplicated with a static-k monotone pass so Lagrange nodes are strictly
+increasing (duplicate nodes would divide by zero in the weights).  The paper
+appends to a Python list and floors on the host; semantics are identical.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def lagrange_weights(t_nodes: Array, t_eval: Array) -> Array:
+    """Weights l_m(t_eval) for nodes t_nodes (k,).  k is static.
+
+    l_m(t) = prod_{l != m} (t - t_l) / (t_m - t_l)      (paper Eq. 13)
+    """
+    k = t_nodes.shape[0]
+    t_nodes = t_nodes.astype(jnp.float32)
+    t_eval = jnp.asarray(t_eval, jnp.float32)
+    diff = t_nodes[:, None] - t_nodes[None, :]          # (k, k), m - l
+    num = t_eval - t_nodes                              # (k,), t - t_l
+    eye = jnp.eye(k, dtype=bool)
+    # ratio[m, l] = (t - t_l) / (t_m - t_l), diagonal := 1
+    ratio = jnp.where(eye, 1.0, num[None, :] / jnp.where(eye, 1.0, diff))
+    return jnp.prod(ratio, axis=1)
+
+
+def interpolate(eps_nodes: Array, t_nodes: Array, t_eval: Array) -> Array:
+    """L_eps(t_eval) = sum_m l_m(t_eval) * eps_m   (paper Eq. 13/14)."""
+    w = lagrange_weights(t_nodes, t_eval).astype(eps_nodes.dtype)
+    return jnp.tensordot(w, eps_nodes, axes=(0, 0))
+
+
+def _dedup_increasing(tau: list[Array], i: Array, k: int) -> Array:
+    """Force tau strictly increasing within [0, i].  k is static."""
+    out = []
+    prev = jnp.int32(-1)
+    for m in range(k):
+        cur = jnp.maximum(tau[m], prev + 1)
+        out.append(cur)
+        prev = cur
+    # backward clamp so the last index can still be <= i
+    fixed = []
+    nxt = i + 1
+    for m in reversed(range(k)):
+        cur = jnp.minimum(out[m], nxt - 1)
+        fixed.append(cur)
+        nxt = cur
+    fixed.reverse()
+    return jnp.stack([jnp.maximum(c, 0) for c in fixed])
+
+
+def ers_select(i: Array, k: int, power: Array) -> Array:
+    """Error-robust selection (Eq. 16/17).
+
+    i      : current step index (buffer holds entries 0..i), traced scalar
+    k      : interpolation order (static)
+    power  : the exponent delta_eps / lambda (or a constant, for the
+             Fig. 5/6 ablation)
+
+    tau_hat_m = (i/k) * m,  m = 1..k        (Eq. 16)
+    tau_m     = floor((tau_hat_m / i)^power * i) = floor((m/k)^power * i)
+    """
+    i_f = i.astype(jnp.float32)
+    power = jnp.asarray(power, jnp.float32)
+    taus = []
+    for m in range(1, k + 1):
+        frac = jnp.float32(m / k)
+        taus.append(jnp.floor(frac**power * i_f).astype(jnp.int32))
+    return _dedup_increasing(taus, i, k)
+
+
+def fixed_select(i: Array, k: int) -> Array:
+    """Fixed strategy: the last k entries (tau_m = i - (k-1) + m)."""
+    return jnp.stack([i - (k - 1) + m for m in range(k)])
+
+
+def select_bases(
+    i: Array, k: int, delta_eps: Array, lam: float, strategy: str,
+    const_power: float | None = None,
+) -> Array:
+    """Dispatch on selection strategy (static string)."""
+    if strategy == "fixed":
+        return fixed_select(i, k)
+    if strategy == "ers":
+        return ers_select(i, k, delta_eps / lam)
+    if strategy == "const":
+        # ablation: replace delta_eps/lambda with a constant power
+        assert const_power is not None
+        return ers_select(i, k, jnp.float32(const_power))
+    raise ValueError(f"unknown selection strategy {strategy!r}")

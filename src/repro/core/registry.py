@@ -1,0 +1,47 @@
+"""Solver registry — the framework's public sampling API.
+
+    from repro.core import get_solver, SolverConfig
+    out = get_solver("era")(eps_fn, x_T, schedule, ERAConfig(nfe=10, k=4))
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+from repro.core import adams, ddim, dpm_solver, era
+from repro.core.era import ERAConfig
+from repro.core.solver_base import SolverConfig, SolverOutput
+
+SampleFn = Callable[..., SolverOutput]
+
+_SOLVERS: dict[str, SampleFn] = {
+    # baselines the paper compares against
+    "ddim": ddim.sample,
+    "explicit_adams": adams.explicit_adams_sample,          # PNDM/FON family
+    "implicit_adams_pece": adams.implicit_adams_pece_sample,
+    "dpm_solver_2": functools.partial(dpm_solver.sample, order=2, fast=False),
+    "dpm_solver_fast": functools.partial(dpm_solver.sample, order=3, fast=True),
+    "dpm_solver_pp2m": dpm_solver.sample_pp2m,
+    # the paper's contribution (+ its Table-4 "fixed" ablation)
+    "era": era.sample,
+}
+
+
+def get_solver(name: str) -> SampleFn:
+    try:
+        return _SOLVERS[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown solver {name!r}; available: {sorted(_SOLVERS)}"
+        ) from None
+
+
+def solver_names() -> list[str]:
+    return sorted(_SOLVERS)
+
+
+def default_config(name: str, **kw) -> SolverConfig:
+    if name == "era":
+        return ERAConfig(**kw)
+    return SolverConfig(**kw)

@@ -1,0 +1,185 @@
+"""Noise schedules and timestep schemes for diffusion ODE solvers.
+
+All solvers in :mod:`repro.core` operate on a continuous-time VP
+(variance-preserving) diffusion, ``x_t = alpha(t) x_0 + sigma(t) eps`` with
+``alpha(t)^2 + sigma(t)^2 = 1`` and ``t`` running from ``t_begin`` (~1, pure
+noise) down to ``t_end`` (~0, data).  Discrete-time pretrained DDPMs (the
+paper uses T=1000 linear-beta checkpoints from DDIM) are covered by the
+closed-form continuous interpolation of the linear-beta schedule, which is
+exact at the discrete grid points up to O(1/T^2).
+
+The paper's timestep schemes:
+  * ``uniform``  — t_i uniform in t (LSUN experiments, Sec. 4.1)
+  * ``logsnr``   — t_i uniform in lambda(t) = log(alpha/sigma) (Cifar10,
+                   following DPM-Solver)
+  * ``quadratic``— t_i quadratic in t (common DDIM variant; extra)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class NoiseSchedule:
+    """Continuous-time VP noise schedule.
+
+    ``log_alpha_bar_fn`` maps t in [0, 1] to ``log(alpha_bar(t))`` =
+    ``2 * log(alpha(t))``.  Everything else is derived.
+    """
+
+    name: str
+    log_alpha_bar_fn: Callable[[Array], Array]
+    t_begin: float = 1.0
+    t_end: float = 1e-3
+    # Discrete grid (for discrete-time pretrained model adapters).
+    num_train_steps: int = 1000
+
+    # -- primitives ---------------------------------------------------------
+    def log_alpha_bar(self, t: Array) -> Array:
+        return self.log_alpha_bar_fn(t)
+
+    def alpha(self, t: Array) -> Array:
+        """sqrt(alpha_bar(t)) — the signal coefficient."""
+        return jnp.exp(0.5 * self.log_alpha_bar(t))
+
+    def sigma(self, t: Array) -> Array:
+        """sqrt(1 - alpha_bar(t)) — the noise coefficient."""
+        return jnp.sqrt(-jnp.expm1(self.log_alpha_bar(t)))
+
+    def lam(self, t: Array) -> Array:
+        """Half log-SNR: lambda(t) = log(alpha(t) / sigma(t))."""
+        log_ab = self.log_alpha_bar(t)
+        return 0.5 * (log_ab - jnp.log(-jnp.expm1(log_ab)))
+
+    # -- inverse lambda (needed by logSNR scheme and DPM-Solver) ------------
+    def inv_lam(self, lam: Array) -> Array:
+        """Invert lambda(t); generic bisection (schedules may override)."""
+        lo = jnp.full_like(lam, 0.0)
+        hi = jnp.full_like(lam, 1.0)
+
+        def body(_, lohi):
+            lo, hi = lohi
+            mid = 0.5 * (lo + hi)
+            # lambda is decreasing in t
+            go_right = self.lam(mid) > lam
+            return (jnp.where(go_right, mid, lo), jnp.where(go_right, hi, mid))
+
+        lo, hi = jax.lax.fori_loop(0, 64, body, (lo, hi))
+        return 0.5 * (lo + hi)
+
+    # -- DDIM / diffusion-ODE update coefficients (paper Eq. 8) -------------
+    def ddim_coeffs(self, t_cur: Array, t_next: Array) -> tuple[Array, Array]:
+        """Return (cx, ce) such that x_next = cx * x_cur + ce * eps."""
+        a_cur, a_next = self.alpha(t_cur), self.alpha(t_next)
+        s_cur, s_next = self.sigma(t_cur), self.sigma(t_next)
+        cx = a_next / a_cur
+        ce = s_next - cx * s_cur
+        return cx, ce
+
+    # -- discrete adapter ----------------------------------------------------
+    def discrete_t(self, t: Array) -> Array:
+        """Map continuous t in (0,1] to the discrete index in [0, T-1]."""
+        return jnp.clip(
+            jnp.round(t * self.num_train_steps - 1), 0, self.num_train_steps - 1
+        ).astype(jnp.int32)
+
+
+def linear_schedule(
+    beta_start: float = 1e-4,
+    beta_end: float = 2e-2,
+    num_train_steps: int = 1000,
+    t_end: float = 1e-3,
+) -> NoiseSchedule:
+    """Continuous interpolation of the DDPM linear-beta schedule.
+
+    With beta(t) = beta_0 + t (beta_1 - beta_0) (betas scaled by T),
+    log alpha_bar(t) = -0.5 * integral_0^t beta(s) ds
+                     = -0.25 t^2 (b1 - b0) - 0.5 t b0
+    where b0 = beta_start * T, b1 = beta_end * T.
+    """
+    b0 = beta_start * num_train_steps
+    b1 = beta_end * num_train_steps
+
+    def log_alpha_bar(t):
+        t = jnp.asarray(t, jnp.float32)
+        return -0.25 * t**2 * (b1 - b0) - 0.5 * t * b0
+
+    sched = NoiseSchedule(
+        name="linear",
+        log_alpha_bar_fn=log_alpha_bar,
+        t_end=t_end,
+        num_train_steps=num_train_steps,
+    )
+
+    # Closed-form inverse lambda: t solves
+    #   0.25 (b1-b0) t^2 + 0.5 b0 t + log_ab = 0   (log_ab < 0)
+    def inv_lam_exact(lam):
+        log_ab = -jax.nn.softplus(-2.0 * lam)
+        a = 0.25 * (b1 - b0)
+        b = 0.5 * b0
+        c = log_ab
+        return (-b + jnp.sqrt(b * b - 4 * a * c)) / (2 * a)
+
+    object.__setattr__(sched, "inv_lam", inv_lam_exact)
+    return sched
+
+
+def cosine_schedule(s: float = 8e-3, t_end: float = 1e-3) -> NoiseSchedule:
+    """Improved-DDPM cosine schedule, continuous form."""
+
+    log_f0 = 2.0 * math.log(math.cos(s / (1 + s) * math.pi / 2))
+
+    def log_alpha_bar(t):
+        t = jnp.asarray(t, jnp.float32)
+        f = jnp.cos((t + s) / (1 + s) * jnp.pi / 2)
+        # clip to avoid log(0) at t=1
+        return 2.0 * jnp.log(jnp.clip(f, 1e-6)) - log_f0
+
+    return NoiseSchedule(name="cosine", log_alpha_bar_fn=log_alpha_bar, t_end=t_end)
+
+
+def get_schedule(name: str, **kw) -> NoiseSchedule:
+    if name == "linear":
+        return linear_schedule(**kw)
+    if name == "cosine":
+        return cosine_schedule(**kw)
+    raise ValueError(f"unknown schedule {name!r}")
+
+
+# ---------------------------------------------------------------------------
+# Timestep schemes: produce the solver grid {t_i}_{i=0}^{N}, t_0 = t_begin
+# (noise) decreasing to t_N = t_end (data).  N = NFE for 1-eval-per-step
+# solvers (DDIM, explicit Adams, ERA).
+# ---------------------------------------------------------------------------
+
+
+def timesteps(
+    schedule: NoiseSchedule,
+    num_steps: int,
+    scheme: str = "uniform",
+    t_begin: float | None = None,
+    t_end: float | None = None,
+) -> Array:
+    """Return (num_steps + 1,) decreasing times from t_begin to t_end."""
+    t0 = schedule.t_begin if t_begin is None else t_begin
+    t1 = schedule.t_end if t_end is None else t_end
+    if scheme == "uniform":
+        return jnp.linspace(t0, t1, num_steps + 1)
+    if scheme == "quadratic":
+        u = jnp.linspace(math.sqrt(t0), math.sqrt(t1), num_steps + 1)
+        return u**2
+    if scheme == "logsnr":
+        lam0, lam1 = schedule.lam(jnp.float32(t0)), schedule.lam(jnp.float32(t1))
+        lams = jnp.linspace(lam0, lam1, num_steps + 1)
+        ts = schedule.inv_lam(lams)
+        # pin the endpoints exactly
+        return ts.at[0].set(t0).at[-1].set(t1)
+    raise ValueError(f"unknown timestep scheme {scheme!r}")

@@ -1,0 +1,88 @@
+"""Common solver machinery.
+
+A *solver* turns a pretrained noise-prediction network ``eps_fn(x, t) -> eps``
+(t a scalar, broadcast over the batch) plus a :class:`NoiseSchedule` and a
+timestep grid into a sampling loop.  Every solver here is a pure function of
+its inputs and is jit/pjit-compatible: buffers are fixed-size, control flow is
+``lax.fori_loop`` / ``lax.cond``, and nothing syncs to the host.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.schedules import NoiseSchedule
+
+Array = jax.Array
+EpsFn = Callable[[Array, Array], Array]
+
+
+class SolverOutput(NamedTuple):
+    """Result of a sampling run."""
+
+    x0: Array                 # final sample (at t_N)
+    nfe: Array                # number of network evaluations actually used
+    aux: dict[str, Any]       # solver-specific diagnostics
+
+
+@dataclasses.dataclass(frozen=True)
+class SolverConfig:
+    """Options shared by all solvers."""
+
+    nfe: int = 10                    # network-evaluation budget
+    scheme: str = "uniform"          # timestep scheme
+    t_end: float | None = None       # override schedule.t_end
+    solver_dtype: Any = jnp.float32  # dtype for solver state / buffer math
+    return_trajectory: bool = False  # record x at every step (debug/bench)
+
+
+def ddim_step(
+    schedule: NoiseSchedule, x: Array, eps: Array, t_cur: Array, t_next: Array
+) -> Array:
+    """Diffusion-ODE / deterministic DDIM update (paper Eq. 8).
+
+    Computed in x's dtype (the solver state dtype) — f32 coefficients must
+    not silently promote a bf16 solver state."""
+    cx, ce = schedule.ddim_coeffs(t_cur, t_next)
+    return cx.astype(x.dtype) * x + ce.astype(x.dtype) * eps.astype(x.dtype)
+
+
+def buffer_init(x_like: Array, capacity: int, dtype) -> tuple[Array, Array]:
+    """Fixed-capacity noise/time buffers (the paper's Lagrange buffer Omega).
+
+    TPU adaptation: Algorithm 1 appends to a Python list; we preallocate
+    ``capacity`` slots and append via ``dynamic_update_index_in_dim`` so the
+    whole sampling loop stays inside a single XLA program.
+    """
+    eps_buf = jnp.zeros((capacity,) + x_like.shape, dtype)
+    t_buf = jnp.zeros((capacity,), jnp.float32)
+    return eps_buf, t_buf
+
+
+def buffer_append(
+    eps_buf: Array, t_buf: Array, idx: Array, eps: Array, t: Array
+) -> tuple[Array, Array]:
+    eps_buf = jax.lax.dynamic_update_index_in_dim(
+        eps_buf, eps.astype(eps_buf.dtype), idx, axis=0
+    )
+    t_buf = jax.lax.dynamic_update_index_in_dim(
+        t_buf, jnp.asarray(t, t_buf.dtype), idx, axis=0
+    )
+    return eps_buf, t_buf
+
+
+def trajectory_init(x: Array, num_steps: int, enabled: bool) -> Array | None:
+    if not enabled:
+        return None
+    traj = jnp.zeros((num_steps + 1,) + x.shape, x.dtype)
+    return traj.at[0].set(x)
+
+
+def trajectory_append(traj: Array | None, i: Array, x: Array) -> Array | None:
+    if traj is None:
+        return None
+    return jax.lax.dynamic_update_index_in_dim(traj, x, i, axis=0)

@@ -1,0 +1,7 @@
+from repro.data.synthetic import (
+    DataConfig,
+    GaussianMixtureLatents,
+    TokenStream,
+    frontend_features,
+    make_loader,
+)

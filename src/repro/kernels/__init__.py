@@ -1,0 +1,1 @@
+"""Pallas TPU kernels (+ jnp oracles in ref.py, jit wrappers in ops.py)."""

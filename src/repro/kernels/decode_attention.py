@@ -1,0 +1,128 @@
+"""Single-token GQA decode attention over a (ring-buffer) KV cache.
+
+One query token per sequence; rows of the MXU tile are the G query heads
+sharing a kv head (padded to the sublane multiple by ops.py).  Grid is
+``(batch*kv_heads, kv_blocks)`` with online-softmax state in VMEM scratch —
+the decode-time analogue of the flash kernel, reading the cache exactly
+once per step.  Ring-buffer semantics come for free from the positional
+mask (slot position -1 = empty, window/protected predicates fused).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(
+    qpos_ref, kpos_ref, q_ref, k_ref, v_ref,
+    o_ref,
+    acc_ref, m_ref, l_ref,
+    *,
+    scale: float,
+    window: int,
+    protected: int,
+    nk: int,
+):
+    ik = pl.program_id(1)
+
+    @pl.when(ik == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0].astype(jnp.float32)        # (G, hd)
+    k = k_ref[0].astype(jnp.float32)        # (bk, hd)
+    v = v_ref[0].astype(jnp.float32)        # (bk, hd)
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * scale                               # (G, bk)
+
+    qp = qpos_ref[0]                        # scalar
+    kp = kpos_ref[...][None, :]             # (1, bk)
+    valid = (kp >= 0) & (kp <= qp)
+    if window > 0:
+        in_w = kp > qp - window
+        if protected > 0:
+            in_w |= kp < protected
+        valid &= in_w
+    s = jnp.where(valid, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+    p = jnp.where(s > NEG_INF / 2, jnp.exp(s - m_new[:, None]), 0.0)
+    alpha = jnp.where(m_prev > NEG_INF / 2, jnp.exp(m_prev - m_new), 0.0)
+    acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1)
+    m_ref[...] = m_new
+
+    @pl.when(ik == nk - 1)
+    def _finalize():
+        l = l_ref[...]
+        o_ref[0, :, :] = (
+            acc_ref[...] / jnp.where(l > 0.0, l, 1.0)[:, None]
+        ).astype(o_ref.dtype)
+
+
+def decode_attention(
+    q: jax.Array,       # (B, H, hd) — one token; H = KV * G
+    k: jax.Array,       # (B, KV, S, hd)
+    v: jax.Array,       # (B, KV, S, hd)
+    q_pos: jax.Array,   # scalar int32 absolute position
+    kv_pos: jax.Array,  # (S,) int32 slot positions (-1 empty)
+    *,
+    window: int = 0,
+    protected: int = 0,
+    scale: float | None = None,
+    block_k: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    b, h, hd = q.shape
+    kvh, s = k.shape[1], k.shape[2]
+    g = h // kvh
+    assert s % block_k == 0, (s, block_k)
+    nk = s // block_k
+    grid = (b * kvh, nk)
+
+    kernel = functools.partial(
+        _decode_kernel,
+        scale=hd**-0.5 if scale is None else scale,
+        window=window,
+        protected=protected,
+        nk=nk,
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda bk_, ik: (0,)),
+            pl.BlockSpec((block_k,), lambda bk_, ik: (ik,)),
+            pl.BlockSpec((1, g, hd), lambda bk_, ik: (bk_, 0, 0)),
+            pl.BlockSpec((1, block_k, hd), lambda bk_, ik: (bk_, ik, 0)),
+            pl.BlockSpec((1, block_k, hd), lambda bk_, ik: (bk_, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, g, hd), lambda bk_, ik: (bk_, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * kvh, g, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((g, hd), jnp.float32),
+            pltpu.VMEM((g,), jnp.float32),
+            pltpu.VMEM((g,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(
+        jnp.atleast_1d(q_pos).astype(jnp.int32),
+        kv_pos.astype(jnp.int32),
+        q.reshape(b * kvh, g, hd),
+        k.reshape(b * kvh, s, hd),
+        v.reshape(b * kvh, s, hd),
+    )
+    return out.reshape(b, h, hd)

@@ -1,0 +1,151 @@
+"""Flash attention, Pallas TPU kernel (prefill / training path).
+
+Canonical TPU online-softmax pattern: 3-D grid ``(batch*heads, q_blocks,
+kv_blocks)`` iterated sequentially on-core; the (acc, m, l) state lives in
+VMEM scratch and persists across the innermost kv dimension.  Blocks are
+MXU-aligned (q/kv block 128, head_dim padded to a multiple of 128 by the
+ops.py wrapper).  GQA is expressed in the k/v BlockSpec index maps (q head
+h reads kv head h // G), so no KV replication is materialized in HBM.
+
+Masking is positional, matching :func:`repro.kernels.ref.flash_attention_ref`:
+q_pos / kv_pos arrays carry absolute positions (-1 = invalid slot), and
+window/causal/protected (attention-sink) predicates are fused into the
+score block.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(
+    # inputs (per BlockSpec)
+    qpos_ref, kpos_ref, q_ref, k_ref, v_ref,
+    # output
+    o_ref,
+    # scratch
+    acc_ref, m_ref, l_ref,
+    *,
+    scale: float,
+    window: int,
+    causal: bool,
+    softcap: float,
+    protected: int,
+    nk: int,
+):
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0].astype(jnp.float32)                    # (bq, hd)
+    k = k_ref[0].astype(jnp.float32)                    # (bk, hd)
+    v = v_ref[0].astype(jnp.float32)                    # (bk, hd)
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * scale                                           # (bq, bk)
+    if softcap > 0.0:
+        s = softcap * jnp.tanh(s / softcap)
+
+    qp = qpos_ref[...][:, None]                         # (bq, 1)
+    kp = kpos_ref[...][None, :]                         # (1, bk)
+    valid = kp >= 0
+    if causal:
+        valid &= kp <= qp
+    if window > 0:
+        in_w = kp > qp - window
+        if protected > 0:
+            in_w |= kp < protected
+        valid &= in_w
+    s = jnp.where(valid, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+    p = jnp.where(s > NEG_INF / 2, jnp.exp(s - m_new[:, None]), 0.0)
+    alpha = jnp.where(m_prev > NEG_INF / 2, jnp.exp(m_prev - m_new), 0.0)
+    acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1)
+    m_ref[...] = m_new
+
+    @pl.when(ik == nk - 1)
+    def _finalize():
+        l = l_ref[...]
+        o_ref[0, :, :] = (
+            acc_ref[...] / jnp.where(l > 0.0, l, 1.0)[:, None]
+        ).astype(o_ref.dtype)
+
+
+def flash_attention(
+    q: jax.Array,       # (B, H, Sq, hd)
+    k: jax.Array,       # (B, KV, Sk, hd)
+    v: jax.Array,       # (B, KV, Sk, hd)
+    q_pos: jax.Array,   # (Sq,) int32
+    kv_pos: jax.Array,  # (Sk,) int32
+    *,
+    window: int = 0,
+    causal: bool = True,
+    softcap: float = 0.0,
+    protected: int = 0,
+    scale: float | None = None,   # defaults to hd**-0.5 (pre-padding value)
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """Raw Pallas call: shapes must already be block-aligned (see ops.py)."""
+    b, h, sq, hd = q.shape
+    kvh, sk = k.shape[1], k.shape[2]
+    g = h // kvh
+    assert sq % block_q == 0 and sk % block_k == 0, (sq, sk, block_q, block_k)
+    nq, nk = sq // block_q, sk // block_k
+    grid = (b * h, nq, nk)
+
+    def kv_index(bh, iq, ik):
+        return ((bh // h) * kvh + (bh % h) // g, ik, 0)
+
+    kernel = functools.partial(
+        _flash_kernel,
+        scale=hd**-0.5 if scale is None else scale,
+        window=window,
+        causal=causal,
+        softcap=softcap,
+        protected=protected,
+        nk=nk,
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_q,), lambda bh, iq, ik: (iq,)),
+            pl.BlockSpec((block_k,), lambda bh, iq, ik: (ik,)),
+            pl.BlockSpec((1, block_q, hd), lambda bh, iq, ik: (bh, iq, 0)),
+            pl.BlockSpec((1, block_k, hd), kv_index),
+            pl.BlockSpec((1, block_k, hd), kv_index),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, hd), lambda bh, iq, ik: (bh, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, sq, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, hd), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(
+        q_pos.astype(jnp.int32),
+        kv_pos.astype(jnp.int32),
+        q.reshape(b * h, sq, hd),
+        k.reshape(b * kvh, sk, hd),
+        v.reshape(b * kvh, sk, hd),
+    )
+    return out.reshape(b, h, sq, hd)

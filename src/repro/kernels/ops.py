@@ -1,0 +1,154 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+Handles the hardware-alignment plumbing so callers keep natural shapes:
+* pads head_dim to a 128 multiple and seq lens to block multiples
+  (padded key slots get position -1 => masked out; padded head dims are
+  zeros => contribute nothing to dot products, scale uses the true hd);
+* pads GQA group G to the f32 sublane multiple (8) for the decode kernel;
+* auto-selects interpret mode off-TPU so the same call sites work in CPU
+  tests and on real hardware.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import decode_attention as _dec
+from repro.kernels import era_update as _era
+from repro.kernels import flash_attention as _fa
+from repro.core.lagrange import lagrange_weights
+
+Array = jax.Array
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pad_to(x: Array, mult: int, axis: int, value=0) -> Array:
+    n = x.shape[axis]
+    pad = (-n) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=value)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("window", "causal", "softcap", "protected", "block_q", "block_k"),
+)
+def flash_attention(
+    q: Array,       # (B, Sq, H, hd) — model layout
+    k: Array,       # (B, Sk, KV, hd)
+    v: Array,
+    q_pos: Array,
+    kv_pos: Array,
+    *,
+    window: int = 0,
+    causal: bool = True,
+    softcap: float = 0.0,
+    protected: int = 0,
+    block_q: int = 128,
+    block_k: int = 128,
+) -> Array:
+    b, sq, h, hd = q.shape
+    sk, kvh = k.shape[1], k.shape[2]
+    bq = min(block_q, max(8, 1 << (sq - 1).bit_length()))
+    bk = min(block_k, max(128, 0) if sk >= 128 else 128)
+    # kernel layout (B, H, S, hd)
+    qt = _pad_to(_pad_to(q.transpose(0, 2, 1, 3), 128, 3), bq, 2)
+    kt = _pad_to(_pad_to(k.transpose(0, 2, 1, 3), 128, 3), bk, 2)
+    vt = _pad_to(_pad_to(v.transpose(0, 2, 1, 3), 128, 3), bk, 2)
+    qp = _pad_to(q_pos.astype(jnp.int32), bq, 0, value=-(10**9))
+    kp = _pad_to(kv_pos.astype(jnp.int32), bk, 0, value=-1)
+    out = _fa.flash_attention(
+        qt, kt, vt, qp, kp,
+        window=window, causal=causal, softcap=softcap, protected=protected,
+        scale=hd**-0.5, block_q=bq, block_k=bk,
+        interpret=_interpret(),
+    )
+    return out[:, :, :sq, :hd].transpose(0, 2, 1, 3)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("window", "protected", "block_k")
+)
+def decode_attention(
+    q: Array,       # (B, 1, H, hd) or (B, H, hd)
+    k: Array,       # (B, S, KV, hd) cache layout
+    v: Array,
+    q_pos: Array,   # scalar
+    kv_pos: Array,  # (S,)
+    *,
+    window: int = 0,
+    protected: int = 0,
+    block_k: int = 128,
+) -> Array:
+    squeeze = q.ndim == 4
+    if squeeze:
+        q = q[:, 0]
+    b, h, hd = q.shape
+    s, kvh = k.shape[1], k.shape[2]
+    g = h // kvh
+    gp = -(-g // 8) * 8  # pad group rows to sublane multiple
+    qt = _pad_to(q.reshape(b, kvh, g, hd), 128, 3)
+    if gp != g:
+        qt = _pad_to(qt, gp, 2)
+    qt = qt.reshape(b, kvh * gp, qt.shape[-1])
+    kt = _pad_to(_pad_to(k.transpose(0, 2, 1, 3), 128, 3), block_k, 2)
+    vt = _pad_to(_pad_to(v.transpose(0, 2, 1, 3), 128, 3), block_k, 2)
+    kp = _pad_to(kv_pos.astype(jnp.int32), block_k, 0, value=-1)
+    out = _dec.decode_attention(
+        qt, kt, vt, q_pos, kp,
+        window=window, protected=protected, scale=hd**-0.5,
+        block_k=block_k, interpret=_interpret(),
+    )
+    out = out.reshape(b, kvh, gp, -1)[:, :, :g, :hd].reshape(b, h, hd)
+    return out[:, None] if squeeze else out
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def era_step(
+    x: Array,          # sample, any shape
+    eps_sel: Array,    # (k, *x.shape)
+    t_sel: Array,      # (k,)
+    e_hist: Array,     # (3, *x.shape)
+    t_next: Array,
+    cx: Array,
+    ce: Array,
+    am4: Array,        # (4,)
+    *,
+    block: int = 4096,
+) -> tuple[Array, Array]:
+    """Fused ERA step on arbitrary-shaped samples. Returns (x_next, eps_bar)."""
+    shape = x.shape
+    n = x.size
+    lag_w = lagrange_weights(t_sel, t_next)
+    xf = _pad_to(x.reshape(-1), block, 0)
+    es = _pad_to(eps_sel.reshape(eps_sel.shape[0], -1), block, 1)
+    eh = _pad_to(e_hist.reshape(3, -1), block, 1)
+    x_next, eps_bar = _era.era_update(
+        xf, es, lag_w, eh, am4, cx, ce, block=block, interpret=_interpret()
+    )
+    return x_next[:n].reshape(shape), eps_bar[:n].reshape(shape)
+
+
+def era_combine(eps_sel, t_sel, e_hist, t_next, am4=None):
+    """Drop-in for repro.core.era.era_combine backed by the fused kernel
+    (combine only — the DDIM x-update stays outside; used when the solver
+    requested use_fused_update but the caller manages x itself)."""
+    from repro.core.era import AM4
+
+    am4 = jnp.asarray(AM4 if am4 is None else am4, jnp.float32)
+    x_dummy = jnp.zeros(eps_sel.shape[1:], eps_sel.dtype)
+    x_next, eps_bar = era_step(
+        x_dummy, eps_sel, t_sel, e_hist, t_next,
+        jnp.float32(0.0), jnp.float32(1.0), am4,
+    )
+    # with cx=0, ce=1 the kernel's x_next equals eps_corr
+    return eps_bar, x_next

@@ -1,0 +1,104 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets).
+
+These are the semantic ground truth; the kernels must match them on every
+shape/dtype the tests sweep.  They are also the fallbacks the framework uses
+on non-TPU backends outside interpret-mode tests.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+NEG_INF = -1e30
+
+
+def _bias(q_pos, kv_pos, window: int, causal: bool, protected: int = 0):
+    q = q_pos[:, None]
+    k = kv_pos[None, :]
+    valid = k >= 0
+    if causal:
+        valid &= k <= q
+    if window > 0:
+        in_w = k > q - window
+        if protected > 0:
+            in_w |= k < protected
+        valid &= in_w
+    return jnp.where(valid, 0.0, NEG_INF).astype(jnp.float32)
+
+
+def flash_attention_ref(
+    q: Array,        # (B, H, Sq, hd)
+    k: Array,        # (B, KV, Sk, hd)
+    v: Array,        # (B, KV, Sk, hd)
+    q_pos: Array,    # (Sq,) int32
+    kv_pos: Array,   # (Sk,) int32
+    *,
+    window: int = 0,
+    causal: bool = True,
+    softcap: float = 0.0,
+    protected: int = 0,
+) -> Array:
+    b, h, sq, hd = q.shape
+    kv = k.shape[1]
+    g = h // kv
+    qg = q.reshape(b, kv, g, sq, hd)
+    s = jnp.einsum("bkgqd,bksd->bkgqs", qg, k).astype(jnp.float32) * (hd**-0.5)
+    if softcap > 0:
+        s = softcap * jnp.tanh(s / softcap)
+    s = s + _bias(q_pos, kv_pos, window, causal, protected)
+    w = jax.nn.softmax(s, axis=-1)
+    # fully-masked rows (all -inf) -> zeros, matching the kernel
+    any_valid = jnp.max(s, axis=-1, keepdims=True) > NEG_INF / 2
+    w = jnp.where(any_valid, w, 0.0)
+    out = jnp.einsum("bkgqs,bksd->bkgqd", w.astype(v.dtype), v)
+    return out.reshape(b, h, sq, hd)
+
+
+def decode_attention_ref(
+    q: Array,        # (B, H, hd) single query token
+    k: Array,        # (B, KV, S, hd) cache
+    v: Array,        # (B, KV, S, hd)
+    q_pos: Array,    # scalar int32 (absolute position)
+    kv_pos: Array,   # (S,) int32, -1 = empty slot
+    *,
+    window: int = 0,
+    protected: int = 0,
+) -> Array:
+    b, h, hd = q.shape
+    kv = k.shape[1]
+    g = h // kv
+    qg = q.reshape(b, kv, g, hd)
+    s = jnp.einsum("bkgd,bksd->bkgs", qg, k).astype(jnp.float32) * (hd**-0.5)
+    bias = _bias(q_pos[None], kv_pos, window, True, protected)[0]  # (S,)
+    s = s + bias
+    w = jax.nn.softmax(s, axis=-1)
+    any_valid = jnp.max(s, axis=-1, keepdims=True) > NEG_INF / 2
+    w = jnp.where(any_valid, w, 0.0)
+    out = jnp.einsum("bkgs,bksd->bkgd", w.astype(v.dtype), v)
+    return out.reshape(b, h, hd)
+
+
+def era_update_ref(
+    x: Array,          # (N,) current sample x_ti (flattened)
+    eps_sel: Array,    # (k, N) ERS-selected buffer noises
+    lag_w: Array,      # (k,) Lagrange weights at t_{i+1}
+    e_hist: Array,     # (3, N) eps at steps i, i-1, i-2
+    am4: Array,        # (4,) Adams-Moulton coefficients
+    cx: Array,         # scalar DDIM x coefficient
+    ce: Array,         # scalar DDIM eps coefficient
+) -> tuple[Array, Array]:
+    """Fused ERA step: predictor combine + AM4 corrector + DDIM update.
+
+    Returns (x_next, eps_bar).  Everything in f32.
+    """
+    eps_bar = jnp.tensordot(lag_w.astype(jnp.float32), eps_sel.astype(jnp.float32), axes=(0, 0))
+    eps_corr = (
+        am4[0] * eps_bar
+        + am4[1] * e_hist[0].astype(jnp.float32)
+        + am4[2] * e_hist[1].astype(jnp.float32)
+        + am4[3] * e_hist[2].astype(jnp.float32)
+    )
+    x_next = cx * x.astype(jnp.float32) + ce * eps_corr
+    return x_next.astype(x.dtype), eps_bar.astype(x.dtype)

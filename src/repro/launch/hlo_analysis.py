@@ -1,0 +1,263 @@
+"""Loop-aware HLO analysis for the roofline terms.
+
+``compiled.cost_analysis()`` counts each ``while`` body ONCE — under
+scan-over-layers (every model here) that understates FLOPs/bytes by the
+layer count, and it has no collective term at all.  This module parses the
+compiled (post-SPMD, per-device) HLO text into a computation call graph,
+recovers loop trip counts from the loop-condition constants, and accumulates
+
+  * flops            — 2 * prod(result dims) * prod(contracting dims) per
+                       ``dot``, wherever it lives (fusions included)
+  * hbm_bytes        — operands + results of top-level ops (fusions counted
+                       as atomic; tuple/GTE/bitcast/param/const free)
+  * collectives[k]   — result bytes per collective kind
+
+multiplied along while-loop nesting.  Trip count = max integer constant in
+the loop condition computation (XLA emits ``compare(counter, constant(N))``)
+— exact for lax.scan/fori_loop-generated loops.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8, "f8e4m3fn": 1, "f8e5m2": 1,
+    "bf16": 2, "f16": 2, "f32": 4, "f64": 8, "c64": 8, "c128": 16,
+}
+
+COLLECTIVES = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+_FREE_OPS = {
+    "tuple", "get-tuple-element", "bitcast", "parameter", "constant",
+    "iota", "after-all", "partition-id", "replica-id",
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*(\(?[^=]*?\)?)\s*([\w\-]+)\("
+)
+_OPERAND_RE = re.compile(r"%([\w\.\-]+)")
+_CALL_ATTR_RE = re.compile(r"(to_apply|calls|body|condition)=\{?%?([\w\.\-]+)\}?")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+_LHS_CDIMS_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_COMP_HDR_RE = re.compile(
+    r"^\s*(?:ENTRY\s+)?%?([\w\.\-]+)\s*(\(.*\))\s*->\s*.*\{\s*$"
+)
+_PARAM_RE = re.compile(r"([\w\.\-]+):\s*(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes_of_type(type_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        n = 1
+        for d in m.group(2).split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES.get(m.group(1), 4)
+    return total
+
+
+def _first_shape(type_str: str):
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return None, ()
+    dims = tuple(int(d) for d in m.group(2).split(",") if d)
+    return m.group(1), dims
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    type_str: str
+    op: str
+    line: str
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    instrs: list[Instr]
+    shapes: dict[str, str]  # instr/param name -> type str
+
+
+def parse_computations(text: str) -> tuple[dict[str, Computation], str | None]:
+    comps: dict[str, Computation] = {}
+    entry = None
+    cur: Computation | None = None
+    depth = 0
+    for line in text.splitlines():
+        if cur is None:
+            m = _COMP_HDR_RE.match(line)
+            if m and line.rstrip().endswith("{"):
+                cur = Computation(m.group(1), [], {})
+                depth = 1
+                if line.lstrip().startswith("ENTRY"):
+                    entry = cur.name
+                if m.group(2):
+                    for pm in _PARAM_RE.finditer(m.group(2)):
+                        cur.shapes[pm.group(1)] = f"{pm.group(2)}[{pm.group(3)}]"
+            continue
+        depth += line.count("{") - line.count("}")
+        line = re.sub(r"/\*.*?\*/", "", line)  # strip /*index=N*/ comments
+        im = _INSTR_RE.match(line)
+        if im:
+            name, type_str, op = im.group(1), im.group(2), im.group(3)
+            cur.instrs.append(Instr(name, type_str, op, line))
+            cur.shapes[name] = type_str
+        if depth <= 0:
+            comps[cur.name] = cur
+            cur = None
+    return comps, entry
+
+
+def _dot_flops(instr: Instr, comp: Computation) -> float:
+    _, rdims = _first_shape(instr.type_str)
+    n = 1.0
+    for d in rdims:
+        n *= d
+    cm = _LHS_CDIMS_RE.search(instr.line)
+    k = 1.0
+    if cm:
+        # lhs operand = first %name inside the parens after the op
+        paren = instr.line.split(instr.op + "(", 1)[-1]
+        om = _OPERAND_RE.search(paren)
+        if om and om.group(1) in comp.shapes:
+            _, ldims = _first_shape(comp.shapes[om.group(1)])
+            for idx in cm.group(1).split(","):
+                if idx and int(idx) < len(ldims):
+                    k *= ldims[int(idx)]
+    return 2.0 * n * k
+
+
+def _instr_hbm_bytes(instr: Instr, comp: Computation) -> float:
+    if instr.op in _FREE_OPS or instr.op == "while":
+        return 0.0
+    total = float(_shape_bytes_of_type(instr.type_str))
+    paren = instr.line.split(instr.op + "(", 1)[-1]
+    # cut trailing attributes to avoid matching computation names
+    paren = paren.split("), ")[0]
+    for om in _OPERAND_RE.finditer(paren):
+        t = comp.shapes.get(om.group(1))
+        if t:
+            total += _shape_bytes_of_type(t)
+    return total
+
+
+@dataclasses.dataclass
+class Stats:
+    flops: float = 0.0
+    hbm_bytes: float = 0.0
+    dot_bytes: float = 0.0      # operand+result traffic of dots only
+    collectives: dict = dataclasses.field(default_factory=dict)
+
+    def add(self, other: "Stats", mult: float = 1.0):
+        self.flops += mult * other.flops
+        self.hbm_bytes += mult * other.hbm_bytes
+        self.dot_bytes += mult * other.dot_bytes
+        for k, v in other.collectives.items():
+            self.collectives[k] = self.collectives.get(k, 0.0) + mult * v
+
+
+def _trip_count(comps, cond_name: str | None) -> int:
+    comp = comps.get(cond_name)
+    if comp is None:
+        return 1
+    best = 1
+    for instr in comp.instrs:
+        for m in _CONST_RE.finditer(instr.line):
+            best = max(best, int(m.group(1)))
+    return best
+
+
+def analyze(text: str) -> dict:
+    comps, entry = parse_computations(text)
+    memo: dict[tuple[str, bool], Stats] = {}
+
+    def walk(name: str, count_bytes: bool, seen: frozenset) -> Stats:
+        key = (name, count_bytes)
+        if key in memo:
+            return memo[key]
+        comp = comps.get(name)
+        if comp is None or name in seen:
+            return Stats()
+        seen = seen | {name}
+        st = Stats()
+        for instr in comp.instrs:
+            if instr.op == "dot":
+                st.flops += _dot_flops(instr, comp)
+                st.dot_bytes += _instr_hbm_bytes(instr, comp)
+            if instr.op in COLLECTIVES or any(
+                instr.op.startswith(c) for c in COLLECTIVES
+            ):
+                kind = next(c for c in COLLECTIVES if instr.op.startswith(c))
+                b = float(_shape_bytes_of_type(instr.type_str))
+                st.collectives[kind] = st.collectives.get(kind, 0.0) + b
+            if count_bytes:
+                st.hbm_bytes += _instr_hbm_bytes(instr, comp)
+            if instr.op == "while":
+                bm = re.search(r"body=%?([\w\.\-]+)", instr.line)
+                cm = re.search(r"condition=%?([\w\.\-]+)", instr.line)
+                if bm:
+                    trips = _trip_count(comps, cm.group(1) if cm else None)
+                    st.add(walk(bm.group(1), count_bytes, seen), trips)
+            elif instr.op == "fusion":
+                fm = re.search(r"calls=%?([\w\.\-]+)", instr.line)
+                if fm:  # flops inside fusions count; bytes are atomic
+                    st.add(walk(fm.group(1), False, seen), 1.0)
+            elif instr.op == "conditional":
+                bm = re.search(r"branch_computations=\{([^}]*)\}", instr.line)
+                branches = []
+                if bm:
+                    branches = [
+                        b.strip().lstrip("%") for b in bm.group(1).split(",")
+                    ]
+                else:
+                    branches = [
+                        m2.group(1)
+                        for m2 in re.finditer(
+                            r"(?:true|false)_computation=%?([\w\.\-]+)",
+                            instr.line,
+                        )
+                    ]
+                if branches:
+                    # conservative: cost of the most expensive branch
+                    cand = [walk(bn, count_bytes, seen) for bn in branches]
+                    best = max(
+                        cand,
+                        key=lambda s_: (s_.flops, s_.hbm_bytes,
+                                        sum(s_.collectives.values())),
+                    )
+                    st.add(best, 1.0)
+            elif instr.op in ("call", "async-start"):
+                for _, callee in _CALL_ATTR_RE.findall(instr.line):
+                    st.add(walk(callee, count_bytes, seen), 1.0)
+        memo[key] = st
+        return st
+
+    if entry is None:
+        return {"error": "no ENTRY computation found"}
+    st = walk(entry, True, frozenset())
+    return {
+        "flops": st.flops,
+        "hbm_bytes": st.hbm_bytes,          # unfused upper bound (CPU HLO)
+        "dot_bytes": st.dot_bytes,          # matmul operand/result traffic
+        "collectives": st.collectives,
+        "collective_bytes_total": sum(st.collectives.values()),
+    }
+
+
+def collective_bytes(text: str) -> dict:
+    """Back-compat shim: collective byte totals only."""
+    res = analyze(text)
+    out = dict(res.get("collectives", {}))
+    return out

@@ -1,0 +1,30 @@
+"""Production mesh factory (TPU v5e).
+
+Defined as functions (never module-level constants) so importing this module
+never touches jax device state — only the dry-run sets the 512-placeholder-
+device XLA flag, and only in its own process.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips per pod; 2 pods = 512 chips multi-pod."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(model_parallel: int = 1):
+    """Whatever fits the local devices (CPU smoke tests / examples)."""
+    n = jax.device_count()
+    dp = n // model_parallel
+    return jax.make_mesh((dp, model_parallel), ("data", "model"))
+
+
+# TPU v5e hardware constants for the roofline analysis (per chip).
+PEAK_FLOPS_BF16 = 197e12        # FLOP/s
+HBM_BW = 819e9                  # B/s
+ICI_BW_PER_LINK = 50e9          # B/s per link

@@ -1,0 +1,95 @@
+"""Serving launcher: AR generation or ERA-Solver diffusion sampling.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen2-1.5b --smoke \
+        --mode ar --batch 4 --prompt-len 16 --gen 32
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen2-1.5b --smoke \
+        --mode diffusion --solver era --nfe 10
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import arch_names, get_config
+from repro.core import ERAConfig, SolverConfig, linear_schedule, solver_names
+from repro.data import frontend_features
+from repro.models import build_model
+from repro.models.diffusion import DiffusionLM
+from repro.serving import Engine, SampleRequest, SamplerService, ServeConfig
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-1.5b", choices=arch_names())
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--mode", choices=["ar", "diffusion"], default="ar")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--max-len", type=int, default=512)
+    ap.add_argument("--window", type=int, default=-1)
+    ap.add_argument("--solver", default="era", choices=solver_names())
+    ap.add_argument("--nfe", type=int, default=10)
+    ap.add_argument("--k", type=int, default=4)
+    ap.add_argument("--lam", type=float, default=5.0)
+    ap.add_argument("--seq", type=int, default=32, help="diffusion seq len")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, smoke=args.smoke)
+    model = build_model(cfg)
+    key = jax.random.PRNGKey(args.seed)
+
+    if args.mode == "diffusion":
+        dlm = DiffusionLM(model)
+        params = dlm.init(key)
+        sc = (
+            ERAConfig(nfe=args.nfe, k=args.k, lam=args.lam)
+            if args.solver == "era"
+            else SolverConfig(nfe=args.nfe)
+        )
+        svc = SamplerService(dlm, linear_schedule(), args.solver, sc)
+        req = SampleRequest(
+            batch=args.batch, seq_len=args.seq, nfe=args.nfe, seed=args.seed
+        )
+        x0, info = svc.sample(params, req)
+        print(
+            f"sampled latents {x0.shape} via {args.solver} nfe={args.nfe} "
+            f"in {info['wall_s']:.2f}s "
+            f"(mean {float(jnp.mean(x0)):+.4f}, std {float(jnp.std(x0)):.4f})"
+        )
+        return
+
+    params = model.init(key)
+    eng = Engine(model, ServeConfig(max_len=args.max_len, window_override=args.window))
+    rng = np.random.default_rng(args.seed)
+    prompts = jnp.asarray(
+        rng.integers(0, cfg.vocab_size, (args.batch, args.prompt_len)), jnp.int32
+    )
+    extras = {}
+    if cfg.family == "vlm":
+        extras["patches"] = jnp.asarray(
+            frontend_features(rng, args.batch, cfg.frontend.num_positions, cfg.d_model)
+        )
+    if cfg.family == "audio":
+        extras["frames"] = jnp.asarray(
+            frontend_features(rng, args.batch, cfg.frontend.num_positions, cfg.d_model)
+        )
+    t0 = time.perf_counter()
+    toks = eng.generate(params, prompts, args.gen, extras=extras, key=key)
+    toks = jax.block_until_ready(toks)
+    dt = time.perf_counter() - t0
+    print(
+        f"generated {toks.shape} in {dt:.2f}s "
+        f"({args.batch * args.gen / dt:.1f} tok/s); first row: "
+        f"{toks[0][:10].tolist()}"
+    )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,118 @@
+"""Abstract input builders for the dry-run: ShapeDtypeStruct stand-ins for
+every (architecture x input shape) entry point — weak-type-correct,
+shardable, zero allocation.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.configs.registry import InputShape, long_context_policy
+from repro.models.model import Model
+from repro.training import optimizer as opt
+
+Sds = jax.ShapeDtypeStruct
+
+
+def _extras_abstract(cfg: ModelConfig, batch: int) -> dict:
+    out = {}
+    if cfg.family == "vlm":
+        out["patches"] = Sds(
+            (batch, cfg.frontend.num_positions, cfg.d_model), cfg.dtype
+        )
+    if cfg.family == "audio":
+        out["frames"] = Sds(
+            (batch, cfg.frontend.num_positions, cfg.d_model), cfg.dtype
+        )
+    return out
+
+
+def decode_slots(cfg: ModelConfig, shape: InputShape) -> int:
+    """Cache slots for a decode shape (ring buffer for windowed archs)."""
+    if shape.seq_len > 65536:  # long_500k
+        if long_context_policy(cfg) == "swa":
+            return cfg.long_context_window + cfg.num_meta_tokens
+        if cfg.sliding_window:
+            return cfg.sliding_window + cfg.num_meta_tokens
+        # SSM-only stacks still create (tiny) attention caches in hybrid
+        return (cfg.sliding_window or 4096) + cfg.num_meta_tokens
+    return shape.seq_len + cfg.num_meta_tokens
+
+
+def decode_window_override(cfg: ModelConfig, shape: InputShape) -> int:
+    if shape.seq_len > 65536 and long_context_policy(cfg) == "swa":
+        return cfg.long_context_window
+    return -1
+
+
+@dataclasses.dataclass
+class Program:
+    """A lowerable entry point: fn(*args) with abstract args."""
+
+    name: str
+    fn: Callable
+    args: tuple
+    donate: tuple = ()
+
+
+def train_microbatches(
+    cfg: ModelConfig, shape: InputShape, dp: int = 16,
+    act_budget: float = 3e9,
+) -> int:
+    """Gradient-accumulation factor so remat-saved layer inputs
+    (L x B_dev/mu x S x d x 2B) fit the activation budget; mu is a power of
+    two capped at one sample per device per microbatch (B/dp)."""
+    b_dev = max(shape.global_batch // dp, 1)
+    acts = cfg.num_layers * b_dev * shape.seq_len * cfg.d_model * 2
+    mu = 1
+    while acts / mu > act_budget and mu < b_dev:
+        mu *= 2
+    return mu
+
+
+def build_program(model: Model, shape: InputShape, dp: int = 16) -> Program:
+    """The entry point a given input shape exercises."""
+    cfg = model.config
+    b, s = shape.global_batch, shape.seq_len
+
+    if shape.kind == "train":
+        batch = {"tokens": Sds((b, s), jnp.int32), **_extras_abstract(cfg, b)}
+        aparams = model.init_abstract()
+        aopt = opt.abstract_state(aparams)
+        rng = Sds((2,), jnp.uint32)
+
+        from repro.training.train_loop import make_lm_train_step
+
+        mb = train_microbatches(cfg, shape, dp)
+        step = make_lm_train_step(model, opt.OptimizerConfig(), microbatches=mb)
+        return Program("train_step", step, (aparams, aopt, batch, rng))
+
+    if shape.kind == "prefill":
+        batch = {"tokens": Sds((b, s), jnp.int32), **_extras_abstract(cfg, b)}
+        aparams = model.init_abstract(jnp.bfloat16)   # serving weights
+        slots = s + cfg.num_meta_tokens
+
+        def prefill(params, batch):
+            return model.prefill(params, batch, slots)
+
+        return Program("prefill_step", prefill, (aparams, batch))
+
+    # decode
+    slots = decode_slots(cfg, shape)
+    wo = decode_window_override(cfg, shape)
+    batch = {
+        "tokens": Sds((b, 1), jnp.int32),
+        "pos": Sds((), jnp.int32),
+    }
+    aparams = model.init_abstract(jnp.bfloat16)       # serving weights
+    acache = model.abstract_cache(b, slots)
+
+    def decode(params, cache, batch):
+        return model.decode(params, cache, batch, window_override=wo)
+
+    return Program("decode_step", decode, (aparams, acache, batch), donate=(1,))

@@ -1,0 +1,95 @@
+"""Diffusion-LM wrapper: any backbone becomes an eps-prediction denoiser.
+
+This is how the paper's solver integrates with the assigned architectures
+(DESIGN.md §3): x_t lives in embedding space (B, S, d); the wrapper adds
+sinusoidal-time conditioning, runs the backbone stack (non-causal where the
+family supports it), and projects to a noise estimate.  Each NFE of an
+ERA-Solver sampling run is exactly one backbone forward.
+
+Training objective: Eq. 5 of the paper (simplified eps-matching loss).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.schedules import NoiseSchedule
+from repro.models import layers as L
+from repro.models.model import Model
+
+Array = jax.Array
+
+
+def diffusion_specs(model: Model) -> dict:
+    d = model.config.d_model
+    return {
+        "backbone": model.specs(),
+        "time_mlp": L.time_mlp_specs(d),
+        "in_proj": L.linear_specs(d, d),
+        "eps_head": {"w": L.P((d, d), "zeros"), "b": L.P((d,), "zeros")},
+    }
+
+
+@dataclasses.dataclass(frozen=True)
+class DiffusionLM:
+    model: Model
+    causal: bool = False  # attention families denoise bidirectionally
+
+    @property
+    def config(self):
+        return self.model.config
+
+    def specs(self) -> dict:
+        return diffusion_specs(self.model)
+
+    def init(self, key: jax.Array) -> dict:
+        return L.init_params(self.specs(), key, self.config.param_dtype)
+
+    def init_abstract(self) -> dict:
+        return L.abstract_params(self.specs(), self.config.param_dtype)
+
+    def eps(self, params: dict, x_t: Array, t: Array) -> Array:
+        """Noise prediction eps_theta(x_t, t). x_t: (B, S, d); t scalar."""
+        cfg = self.config
+        tcond = L.time_mlp(params["time_mlp"], jnp.atleast_1d(t))  # (1, d)
+        h = L.linear(params["in_proj"], x_t.astype(cfg.dtype))
+        h = h + tcond[:, None, :].astype(h.dtype)
+        h, _ = self.model.backbone(
+            params["backbone"], h, mode="train", causal=self.causal
+        )
+        eps = h @ params["eps_head"]["w"].astype(h.dtype) + params["eps_head"][
+            "b"
+        ].astype(h.dtype)
+        # zero-init head -> identity-ish residual from x_t at step 0
+        return (eps.astype(jnp.float32) + x_t.astype(jnp.float32)).astype(
+            x_t.dtype
+        )
+
+    def eps_fn(self, params: dict):
+        """Closure matching the solver API: eps_fn(x, t) -> eps."""
+        return lambda x, t: self.eps(params, x, t)
+
+    def loss(
+        self, params: dict, batch: dict, rng: jax.Array, schedule: NoiseSchedule
+    ) -> tuple[Array, dict]:
+        """Eps-matching diffusion loss on clean latents batch["latents"]."""
+        x0 = batch["latents"].astype(jnp.float32)
+        kt, ke = jax.random.split(rng)
+        b = x0.shape[0]
+        # low-discrepancy time sampling across the batch
+        u = (jax.random.uniform(kt, ()) + jnp.arange(b) / b) % 1.0
+        t = schedule.t_end + (schedule.t_begin - schedule.t_end) * u
+        eps = jax.random.normal(ke, x0.shape, jnp.float32)
+        a = schedule.alpha(t)[:, None, None]
+        s = schedule.sigma(t)[:, None, None]
+        x_t = a * x0 + s * eps
+        # per-sample t: vmap the scalar-t eps over the batch
+        pred = jax.vmap(
+            lambda xi, ti: self.eps(params, xi[None], ti)[0]
+        )(x_t.astype(self.config.dtype), t)
+        mse = jnp.mean((pred.astype(jnp.float32) - eps) ** 2)
+        return mse, {"diffusion_mse": mse}

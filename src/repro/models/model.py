@@ -1,0 +1,330 @@
+"""Model assembly: config -> parameter specs + train/prefill/decode closures.
+
+A :class:`Model` bundles everything the substrate layers need:
+
+    m = build_model(cfg)
+    params = m.init(key)                       # real weights
+    aparams = m.init_abstract()                # ShapeDtypeStructs (dry-run)
+    logits, aux = m.forward(params, batch)     # teacher forcing
+    loss, aux = m.loss(params, batch)
+    logits, cache = m.prefill(params, batch, slots)
+    logits, cache = m.decode(params, cache, tokens, pos)
+
+Layer stacks are homogeneous segments scanned with ``lax.scan`` over stacked
+parameters (compile-time is O(#segments), not O(#layers) — 95-layer
+DeepSeek-67B compiles as one scan).  Heterogeneous architectures (xLSTM's
+mLSTM/sLSTM interleave, Hymba's full/SWA mix) are tuples of segments.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models.blocks import BLOCKS, BlockCtx
+from repro.parallel.ctx import constrain_batch
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# parameter specs
+# ---------------------------------------------------------------------------
+
+
+def model_specs(cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    specs: dict[str, Any] = {
+        "embed": L.P((cfg.padded_vocab, d), "embed"),
+        "final_norm": (
+            L.layernorm_specs(d) if cfg.family == "audio" else L.rmsnorm_specs(d)
+        ),
+    }
+    if not cfg.tie_embeddings:
+        specs["lm_head"] = L.P((d, cfg.padded_vocab), "fan_in")
+    if cfg.num_meta_tokens:
+        specs["meta"] = L.P((cfg.num_meta_tokens, d), "embed")
+    if cfg.family == "audio":
+        # learned decoder positions (Whisper)
+        specs["pos_embed"] = L.P((cfg.max_position, d), "embed")
+        enc_seg = L.stack_specs(BLOCKS["enc"].specs(cfg), cfg.num_encoder_layers)
+        specs["encoder"] = {
+            "segs": {"0_enc": enc_seg},
+            "norm": L.layernorm_specs(d),
+        }
+    segs = {}
+    for i, (kind, count) in enumerate(cfg.blocks):
+        segs[f"{i}_{kind}"] = L.stack_specs(BLOCKS[kind].specs(cfg), count)
+    specs["segs"] = segs
+    return specs
+
+
+# ---------------------------------------------------------------------------
+# stack execution
+# ---------------------------------------------------------------------------
+
+
+def _run_segment(
+    kind: str,
+    seg_params,
+    x: Array,
+    seg_cache,
+    ctx: BlockCtx,
+    cfg: ModelConfig,
+):
+    """Scan one homogeneous segment. seg_cache has leading (L,) or None."""
+    block = BLOCKS[kind]
+
+    def body(x, xs):
+        p, c = xs
+        x, new_c, aux = block.apply(p, x, c, ctx, cfg)
+        return x, (new_c, aux)
+
+    if cfg.remat and ctx.mode == "train":
+        body = jax.checkpoint(body)
+
+    if seg_cache is None:
+        x, (_, aux) = jax.lax.scan(body, x, (seg_params, None))
+    else:
+        x, (new_cache, aux) = jax.lax.scan(body, x, (seg_params, seg_cache))
+        return x, new_cache, aux
+    return x, None, aux
+
+
+def _stack(params, x, cache, ctx: BlockCtx, cfg: ModelConfig):
+    new_cache = {}
+    auxes = []
+    x = constrain_batch(x)
+    for i, (kind, count) in enumerate(cfg.blocks):
+        key = f"{i}_{kind}"
+        seg_cache = None if cache is None else cache[key]
+        x, nc, aux = _run_segment(kind, params["segs"][key], x, seg_cache, ctx, cfg)
+        x = constrain_batch(x)
+        if cache is not None:
+            new_cache[key] = nc
+        auxes.append(jax.tree.map(jnp.sum, aux))
+    aux = jax.tree.map(lambda *xs: sum(xs), *auxes)
+    return x, (new_cache if cache is not None else None), aux
+
+
+def _encode(params, frontend: Array, cfg: ModelConfig) -> Array:
+    """Whisper encoder over stub frame embeddings (B, F, d)."""
+    f = frontend.shape[1]
+    pos = L.sinusoidal_time_embed(
+        jnp.arange(f, dtype=jnp.float32) / 1000.0, cfg.d_model
+    )
+    x = frontend.astype(cfg.dtype) + pos.astype(cfg.dtype)
+    ctx = BlockCtx(mode="train")
+    x, _, _ = _run_segment(
+        "enc", params["encoder"]["segs"]["0_enc"], x, None, ctx, cfg
+    )
+    return L.layernorm(params["encoder"]["norm"], x, cfg.norm_eps)
+
+
+def _embed_tokens(params, tokens: Array, cfg: ModelConfig) -> Array:
+    h = jnp.take(params["embed"], tokens, axis=0).astype(cfg.dtype)
+    if cfg.family == "vlm":  # gemma scales embeddings
+        h = h * jnp.asarray(cfg.d_model**0.5, cfg.dtype)
+    return h
+
+
+def _prefix_embeds(params, batch: dict, cfg: ModelConfig):
+    """Per-family sequence prefix (meta tokens / image patches)."""
+    parts = []
+    if cfg.num_meta_tokens:
+        b = batch["tokens"].shape[0]
+        parts.append(
+            jnp.broadcast_to(
+                params["meta"].astype(cfg.dtype),
+                (b, cfg.num_meta_tokens, cfg.d_model),
+            )
+        )
+    if cfg.family == "vlm":
+        parts.append(batch["patches"].astype(cfg.dtype))
+    return parts
+
+
+def _lm_logits(params, h: Array, cfg: ModelConfig) -> Array:
+    w = (
+        params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    ).astype(h.dtype)
+    return h @ w
+
+
+def _positions_offset(batch: dict, cfg: ModelConfig) -> int:
+    off = cfg.num_meta_tokens
+    if cfg.family == "vlm":
+        off += batch["patches"].shape[1]
+    return off
+
+
+# ---------------------------------------------------------------------------
+# the Model bundle
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    config: ModelConfig
+
+    # ---- params ----
+    def specs(self) -> dict:
+        return model_specs(self.config)
+
+    def init(self, key: jax.Array) -> dict:
+        return L.init_params(self.specs(), key, self.config.param_dtype)
+
+    def init_abstract(self, dtype=None) -> dict:
+        return L.abstract_params(self.specs(), dtype or self.config.param_dtype)
+
+    def param_count(self) -> int:
+        return L.count_params(self.specs())
+
+    # ---- caches ----
+    def _slots_for(self, kind: str, slots: int) -> int:
+        """Sliding-window blocks only need ring buffers of window size."""
+        cfg = self.config
+        if kind in ("hymba_swa",) or (
+            kind in ("dense", "moe") and cfg.sliding_window > 0
+        ):
+            return min(slots, cfg.sliding_window + cfg.num_meta_tokens)
+        return slots
+
+    def _cache(self, batch_size: int, slots: int, abstract: bool):
+        cfg = self.config
+        out = {}
+        for i, (kind, count) in enumerate(cfg.blocks):
+            block = BLOCKS[kind]
+            if block.cache is None:
+                continue
+            one = block.cache(
+                cfg, batch_size, self._slots_for(kind, slots), cfg.dtype, abstract
+            )
+            if abstract:
+                out[f"{i}_{kind}"] = jax.tree.map(
+                    lambda s: jax.ShapeDtypeStruct((count,) + s.shape, s.dtype), one
+                )
+            else:
+                out[f"{i}_{kind}"] = jax.tree.map(
+                    lambda x: jnp.broadcast_to(x[None], (count,) + x.shape).copy(),
+                    one,
+                )
+        return out
+
+    def init_cache(self, batch_size: int, slots: int) -> dict:
+        return self._cache(batch_size, slots, abstract=False)
+
+    def abstract_cache(self, batch_size: int, slots: int) -> dict:
+        return self._cache(batch_size, slots, abstract=True)
+
+    # ---- forward passes ----
+    def _assemble(
+        self, params, batch, mode: str, cache=None, causal=True,
+        window_override: int = -1,
+    ):
+        cfg = self.config
+        tokens = batch["tokens"]
+        h_tok = _embed_tokens(params, tokens, cfg)
+        # prefix (meta tokens / image patches) only enters at train/prefill;
+        # during decode it already lives in the cache
+        prefix = [] if mode == "decode" else _prefix_embeds(params, batch, cfg)
+        h = jnp.concatenate(prefix + [h_tok], axis=1) if prefix else h_tok
+
+        enc_out = None
+        if cfg.family == "audio":
+            if mode != "decode":
+                enc_out = _encode(params, batch["frames"], cfg)
+            if mode == "decode":
+                pe = jax.lax.dynamic_index_in_dim(
+                    params["pos_embed"], batch["pos"], 0, keepdims=True
+                )
+                h = h + pe[None].astype(h.dtype)          # (B,1,d)+(1,1,d)
+            else:
+                s = h.shape[1]
+                h = h + params["pos_embed"][:s].astype(h.dtype)
+
+        ctx = BlockCtx(
+            mode=mode,
+            pos=batch.get("pos"),
+            causal=causal,
+            window_override=window_override,
+            protected=cfg.num_meta_tokens,
+            enc_out=enc_out,
+        )
+        h, cache, aux = _stack(params, h, cache, ctx, cfg)
+        norm = (
+            L.layernorm if cfg.family == "audio" else L.rmsnorm
+        )
+        h = norm(params["final_norm"], h, cfg.norm_eps)
+        return h, cache, aux
+
+    def forward(self, params, batch: dict) -> tuple[Array, dict]:
+        """Teacher-forcing full-sequence logits (train mode)."""
+        h, _, aux = self._assemble(params, batch, "train")
+        return _lm_logits(params, h, self.config), aux
+
+    def loss(self, params, batch: dict) -> tuple[Array, dict]:
+        cfg = self.config
+        logits, aux = self.forward(params, batch)
+        off = _positions_offset(batch, cfg)
+        logits = logits[:, off:, :]
+        tokens = batch["tokens"]
+        tgt = tokens[:, 1:]
+        lg = logits[:, :-1, :].astype(jnp.float32)
+        logz = jax.nn.logsumexp(lg, axis=-1)
+        gold = jnp.take_along_axis(lg, tgt[..., None], axis=-1)[..., 0]
+        mask = batch.get("loss_mask")
+        mask = (
+            jnp.ones_like(tgt, jnp.float32) if mask is None else mask[:, 1:]
+        )
+        xent = jnp.sum((logz - gold) * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+        total = xent
+        if cfg.moe is not None:
+            total = (
+                total
+                + cfg.moe.aux_loss_weight * aux["moe_aux"]
+                + cfg.moe.router_z_loss * aux["moe_z"]
+            )
+        return total, {"xent": xent, **aux}
+
+    def prefill(
+        self, params, batch: dict, slots: int, window_override: int = -1
+    ) -> tuple[Array, dict]:
+        """Process the prompt; returns (last-token logits, filled cache)."""
+        cache = batch.get("cache")
+        if cache is None:
+            cache = self.init_cache(batch["tokens"].shape[0], slots)
+        h, cache, _ = self._assemble(
+            params, batch, "prefill", cache, window_override=window_override
+        )
+        return _lm_logits(params, h[:, -1:, :], self.config), cache
+
+    def decode(
+        self, params, cache: dict, batch: dict, window_override: int = -1
+    ) -> tuple[Array, dict]:
+        """One decode step. batch: {"tokens": (B,1), "pos": scalar, ...}."""
+        h, cache, _ = self._assemble(
+            params, batch, "decode", cache, window_override=window_override
+        )
+        return _lm_logits(params, h, self.config), cache
+
+    # ---- diffusion-LM denoiser hook (see repro/models/diffusion.py) ----
+    def backbone(self, params, h: Array, mode: str = "train", causal: bool = True):
+        """Run the block stack on externally-embedded states (B,S,d) —
+        the diffusion-LM denoiser path.  No token prefix is present, so
+        meta-token protection is off; enc-dec stacks run decoder-only."""
+        cfg = self.config
+        ctx = BlockCtx(mode=mode, causal=causal, protected=0)
+        h, _, aux = _stack(params, h, None, ctx, cfg)
+        norm = L.layernorm if cfg.family == "audio" else L.rmsnorm
+        return norm(params["final_norm"], h, cfg.norm_eps), aux
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    return Model(cfg)

@@ -1,0 +1,180 @@
+"""Mixture-of-Experts layer (Mixtral top-2, DeepSeek shared+routed top-6).
+
+Dispatch strategies:
+
+* ``dropping`` (default) — capacity-based token dispatch realized with
+  scatter/gather per batch group (TPU adaptation: no giant one-hot dispatch
+  einsum, so compiled FLOPs stay honest — dispatch moves bytes, the expert
+  FFN does the FLOPs).  Tokens over capacity are dropped (residual passes
+  through), the standard TPU training recipe.
+* ``dense_mix`` — every expert runs on every token, outputs mixed by router
+  probs.  O(E) FLOPs; used as the correctness oracle in tests and for tiny
+  smoke configs.
+* ``expert_parallel`` — shard_map + all_to_all path (see
+  repro/parallel/expert_parallel.py); a §Perf optimization.
+
+Router math is float32 throughout (bf16 routers destabilize top-k).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.parallel.ctx import constrain_dims
+
+Array = jax.Array
+
+
+def moe_specs(cfg) -> dict:
+    m = cfg.moe
+    d = cfg.d_model
+    ff = m.d_ff_expert
+    e = m.num_experts
+    s = {
+        "router": {"w": L.P((d, e), "fan_in")},
+        "experts": {
+            "wi": L.P((e, d, ff), "fan_in"),
+            "wg": L.P((e, d, ff), "fan_in"),
+            "wo": L.P((e, ff, d), "fan_in"),
+        },
+    }
+    if m.num_shared:
+        s["shared"] = L.mlp_specs(d, ff * m.num_shared, "silu")
+    return s
+
+
+def _router(p, x: Array, m) -> tuple[Array, Array, dict]:
+    """Return (weights (..., k), ids (..., k), aux losses)."""
+    logits = (x.astype(jnp.float32) @ p["router"]["w"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    weights, ids = jax.lax.top_k(probs, m.top_k)
+    weights = weights / jnp.sum(weights, axis=-1, keepdims=True)
+    # Switch-style load-balance loss + router z-loss
+    e = m.num_experts
+    density = jnp.mean(
+        jax.nn.one_hot(ids, e, dtype=jnp.float32).sum(axis=-2), axis=tuple(range(ids.ndim - 1))
+    ) / m.top_k
+    mean_prob = jnp.mean(probs, axis=tuple(range(probs.ndim - 1)))
+    aux = {
+        "moe_aux": e * jnp.sum(density * mean_prob),
+        "moe_z": jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2),
+    }
+    return weights, ids, aux
+
+
+def _expert_ffn(experts: dict, xs: Array) -> Array:
+    """xs: (E, C, d) -> (E, C, d), batched over experts."""
+    wi = experts["wi"].astype(xs.dtype)
+    wg = experts["wg"].astype(xs.dtype)
+    wo = experts["wo"].astype(xs.dtype)
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xs, wg)) * jnp.einsum(
+        "ecd,edf->ecf", xs, wi
+    )
+    return jnp.einsum("ecf,efd->ecd", h, wo)
+
+
+def _expert_ffn_grouped(experts: dict, xs: Array) -> Array:
+    """xs: (G, E, C, d) -> (G, E, C, d).  Layouts pinned so GSPMD keeps the
+    token dims on the data axes and the expert hidden dim on the model axis
+    (without this, the d-contraction gets sharded and every MoE layer
+    all-reduces a (E, C, ff)-sized partial sum — see EXPERIMENTS.md §Perf).
+    """
+    wi = experts["wi"].astype(xs.dtype)
+    wg = experts["wg"].astype(xs.dtype)
+    wo = experts["wo"].astype(xs.dtype)
+    # possible here; constrain token dims only and leave E/ff to the weights.
+    xs = constrain_dims(xs, ("dp", None, None, None))
+    h = jax.nn.silu(jnp.einsum("gecd,edf->gecf", xs, wg)) * jnp.einsum(
+        "gecd,edf->gecf", xs, wi
+    )
+    out = jnp.einsum("gecf,efd->gecd", h, wo)
+    return constrain_dims(out, ("dp", None, None, None))
+
+
+def _dispatch_group(p, x: Array, m) -> tuple[Array, tuple, dict]:
+    """Routing + capacity scatter for one token group. x: (S, d).
+    Returns (buf (E, cap+1, d), combine-metadata, aux)."""
+    s, d = x.shape
+    k, e = m.top_k, m.num_experts
+    cap = max(int(s * k / e * m.capacity_factor), 1)
+
+    weights, ids, aux = _router(p, x, m)          # (S, k)
+    flat_e = ids.reshape(-1)                      # (S*k,)
+    flat_w = weights.reshape(-1)
+    tok_idx = jnp.repeat(jnp.arange(s), k)
+
+    # rank of each assignment within its expert (stable by token order)
+    order = jnp.argsort(flat_e, stable=True)
+    sorted_e = flat_e[order]
+    start = jnp.searchsorted(sorted_e, jnp.arange(e))
+    rank_sorted = jnp.arange(s * k) - start[sorted_e]
+    rank = jnp.zeros_like(rank_sorted).at[order].set(rank_sorted)
+
+    keep = rank < cap
+    slot = jnp.where(keep, rank, cap)             # overflow -> dump slot
+
+    # scatter tokens into (E, cap+1, d); dump slot discarded
+    buf = jnp.zeros((e, cap + 1, d), x.dtype)
+    buf = buf.at[flat_e, slot].set(x[tok_idx], mode="drop")
+    return buf, (flat_e, slot, keep, flat_w, tok_idx), aux
+
+
+def _combine_group(out_buf: Array, meta: tuple, s: int) -> Array:
+    """Gather expert outputs back to token order with top-k weights."""
+    flat_e, slot, keep, flat_w, tok_idx = meta
+    cap = out_buf.shape[1]
+    d = out_buf.shape[-1]
+    gathered = out_buf[flat_e, jnp.minimum(slot, cap - 1)]   # (S*k, d)
+    gathered = gathered * keep[:, None].astype(gathered.dtype)
+    return jnp.zeros((s, d), out_buf.dtype).at[tok_idx].add(
+        gathered * flat_w[:, None].astype(gathered.dtype)
+    )
+
+
+def _dense_mix(p, x: Array, m) -> tuple[Array, dict]:
+    """Reference: run all experts on all tokens. x: (..., d)."""
+    weights, ids, aux = _router(p, x, m)
+    e = m.num_experts
+    d = x.shape[-1]
+    flat = jnp.broadcast_to(x.reshape(1, -1, d), (e, x.size // d, d))
+    outs = _expert_ffn(p["experts"], flat)        # (E, N, d)
+    outs = outs.reshape((e,) + x.shape)           # (E, ..., d)
+    sel = jnp.take_along_axis(
+        jnp.moveaxis(outs, 0, -2),                # (..., E, d)
+        ids[..., None],                           # (..., k, 1)
+        axis=-2,
+    )                                             # (..., k, d)
+    mix = jnp.sum(sel * weights[..., None].astype(x.dtype), axis=-2)
+    return mix, aux
+
+
+def moe_ffn(p, x: Array, cfg) -> tuple[Array, dict]:
+    """x: (B, S, d) -> (B, S, d), plus aux losses."""
+    m = cfg.moe
+    b, s, d = x.shape
+    if m.dispatch == "dense_mix":
+        out, aux = _dense_mix(p, x, m)
+    elif m.dispatch == "dropping":
+        # split long sequences into dispatch groups so the (E, C, d)
+        # capacity buffer stays bounded (§Perf iteration B3)
+        g = min(m.dispatch_group, s) if s % min(m.dispatch_group, s) == 0 else s
+        ng = b * (s // g)
+        xg = x.reshape(ng, g, d)
+        # vmap carries only the index math; the expert FFN runs as one
+        # grouped einsum with pinned layouts (see _expert_ffn_grouped)
+        buf, meta, aux_stack = jax.vmap(
+            lambda xx: _dispatch_group(p, xx, m)
+        )(xg)
+        buf = constrain_dims(buf, ("dp", None, None, None))
+        cap = buf.shape[2] - 1
+        out_buf = _expert_ffn_grouped(p["experts"], buf[:, :, :cap])
+        out = jax.vmap(lambda ob, mt: _combine_group(ob, mt, g))(out_buf, meta)
+        out = out.reshape(b, s, d)
+        aux = jax.tree.map(jnp.mean, aux_stack)
+    else:
+        raise ValueError(f"unknown MoE dispatch {m.dispatch!r}")
+    if m.num_shared:
+        out = out + L.mlp(p["shared"], x, "silu")
+    return out, aux

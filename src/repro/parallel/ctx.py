@@ -1,0 +1,87 @@
+"""Activation-sharding constraints, injected contextually.
+
+GSPMD propagates parameter shardings onto activations "sideways" — with
+FSDP-sharded weights it can assign batch activations bizarre layouts
+(observed: embedding-lookup results partitioned over the fsdp axis,
+triggering involuntary full rematerialization).  Production frameworks pin
+activation layouts explicitly (MaxText's ``with_logical_constraint``); here
+launchers install the data-axis names once and the model calls
+:func:`constrain` at stack boundaries.
+
+No-op when no axes are installed (CPU smoke tests, single-device runs).
+"""
+
+from __future__ import annotations
+
+import contextlib
+import contextvars
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+_DATA_AXES: contextvars.ContextVar[tuple[str, ...] | None] = (
+    contextvars.ContextVar("repro_data_axes", default=None)
+)
+_MODEL_AXIS: contextvars.ContextVar[str | None] = (
+    contextvars.ContextVar("repro_model_axis", default=None)
+)
+_SEQ_PARALLEL: contextvars.ContextVar[bool] = (
+    contextvars.ContextVar("repro_seq_parallel", default=False)
+)
+
+
+@contextlib.contextmanager
+def activation_sharding(
+    data_axes: tuple[str, ...], model_axis: str | None = "model",
+    seq_parallel: bool = False,
+):
+    """seq_parallel=True additionally shards (B, S, d) activations' sequence
+    dim over the model axis at stack boundaries (Megatron-SP style): GSPMD
+    then converts the per-block TP all-reduces into reduce-scatter +
+    all-gather pairs around the sharded residual stream."""
+    tok = _DATA_AXES.set(tuple(data_axes))
+    tok2 = _MODEL_AXIS.set(model_axis)
+    tok3 = _SEQ_PARALLEL.set(seq_parallel)
+    try:
+        yield
+    finally:
+        _DATA_AXES.reset(tok)
+        _MODEL_AXIS.reset(tok2)
+        _SEQ_PARALLEL.reset(tok3)
+
+
+def constrain_batch(x: jax.Array, batch_dim: int = 0) -> jax.Array:
+    """Pin dim `batch_dim` to the data axes, others replicated — or, in
+    sequence-parallel mode, shard dim 1 of (B, S, d) over the model axis."""
+    axes = _DATA_AXES.get()
+    if axes is None:
+        return x
+    spec = [None] * x.ndim
+    spec[batch_dim] = axes
+    if (
+        _SEQ_PARALLEL.get()
+        and x.ndim == 3
+        and batch_dim == 0
+        and _MODEL_AXIS.get() is not None
+        and x.shape[1] % 16 == 0
+    ):
+        spec[1] = _MODEL_AXIS.get()
+    return jax.lax.with_sharding_constraint(x, P(*spec))
+
+
+def constrain_dims(x: jax.Array, dims: tuple) -> jax.Array:
+    """Pin dims by role: "dp" -> data axes, "tp" -> model axis, None ->
+    replicated.  No-op outside an activation_sharding context."""
+    axes = _DATA_AXES.get()
+    if axes is None:
+        return x
+    model = _MODEL_AXIS.get()
+    spec = []
+    for d in dims:
+        if d == "dp":
+            spec.append(axes)
+        elif d == "tp":
+            spec.append(model)
+        else:
+            spec.append(None)
+    return jax.lax.with_sharding_constraint(x, P(*spec))

@@ -1,0 +1,2 @@
+from repro.serving.diffusion_sampler import SampleRequest, SamplerService
+from repro.serving.engine import Engine, ServeConfig, cache_slots, resolve_window

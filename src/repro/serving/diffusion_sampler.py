@@ -1,0 +1,90 @@
+"""Diffusion sampling service: ERA-Solver (or any registered solver) driving
+a DiffusionLM denoiser — the paper's deployment shape.
+
+One `SamplerService.sample()` call runs the full solver loop as a single
+jitted XLA program (fori_loop over NFE steps, one backbone eval per step for
+ERA/DDIM/Adams).  The service also exposes `sample_step_lowerable`, the
+entry the dry-run lowers to prove the solver itself distributes (the
+Lagrange buffer shards with the latents; the ERS scalar state replicates).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import ERAConfig, NoiseSchedule, SolverConfig, get_solver
+from repro.models.diffusion import DiffusionLM
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class SampleRequest:
+    batch: int
+    seq_len: int
+    nfe: int = 10
+    solver: str = "era"
+    seed: int = 0
+
+
+class SamplerService:
+    def __init__(
+        self,
+        dlm: DiffusionLM,
+        schedule: NoiseSchedule,
+        solver: str = "era",
+        solver_config: SolverConfig | None = None,
+    ):
+        self.dlm = dlm
+        self.schedule = schedule
+        self.solver_name = solver
+        self.solver_config = solver_config or (
+            ERAConfig() if solver == "era" else SolverConfig()
+        )
+        self._jitted: dict[Any, Any] = {}
+
+    def _runner(self, cfg_key):
+        if cfg_key not in self._jitted:
+            sample_fn = get_solver(self.solver_name)
+            cfg = self.solver_config
+
+            def run(params, x_init):
+                out = sample_fn(
+                    self.dlm.eps_fn(params), x_init, self.schedule, cfg
+                )
+                return out.x0, out.aux
+
+            self._jitted[cfg_key] = jax.jit(run)
+        return self._jitted[cfg_key]
+
+    def sample(self, params, req: SampleRequest) -> tuple[Array, dict]:
+        """Generate req.batch sequences of latents via the solver."""
+        key = jax.random.PRNGKey(req.seed)
+        x_init = jax.random.normal(
+            key, (req.batch, req.seq_len, self.dlm.config.d_model), jnp.float32
+        )
+        cfg = dataclasses.replace(self.solver_config, nfe=req.nfe)
+        self.solver_config = cfg
+        run = self._runner((req.nfe, req.batch, req.seq_len))
+        t0 = time.perf_counter()
+        x0, aux = run(params, x_init)
+        x0 = jax.block_until_ready(x0)
+        wall = time.perf_counter() - t0
+        return x0, {"wall_s": wall, **aux}
+
+    # ---- dry-run hook: the full solver loop as one lowerable program ----
+    def sample_program(self):
+        sample_fn = get_solver(self.solver_name)
+        cfg = self.solver_config
+
+        def program(params, x_init):
+            return sample_fn(
+                self.dlm.eps_fn(params), x_init, self.schedule, cfg
+            ).x0
+
+        return program

@@ -1,0 +1,119 @@
+"""Autoregressive serving engine: batched prefill + decode over a KV cache.
+
+The engine owns the jitted ``prefill_step`` / ``decode_step`` closures — the
+exact functions the multi-pod dry-run lowers for the ``prefill_32k`` /
+``decode_32k`` / ``long_500k`` input shapes — plus a simple synchronous
+batcher for the runnable examples.
+
+Long-context policy (DESIGN.md): decode caches size ``min(max_len, window)``
+slots; for dense architectures the ``long_500k`` shape runs the
+sliding-window variant (ring-buffer cache, `window_override`), for
+SSM/hybrid the state is O(1) and the attention cache (if any) is the SWA
+ring.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.configs.registry import long_context_policy
+from repro.models.model import Model
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    max_len: int = 4096              # max absolute positions served
+    window_override: int = -1        # -1: arch default; >0 force SWA window
+    greedy: bool = True
+    temperature: float = 1.0
+
+
+def cache_slots(cfg: ModelConfig, serve: ServeConfig) -> int:
+    """How many KV slots the decode cache needs."""
+    window = serve.window_override
+    if window < 0:
+        window = cfg.sliding_window
+    if window and window > 0:
+        return min(serve.max_len, window + cfg.num_meta_tokens)
+    return serve.max_len
+
+
+def resolve_window(cfg: ModelConfig, serve: ServeConfig, seq_len: int) -> int:
+    """Window to run decode with (0 = full attention)."""
+    if serve.window_override >= 0:
+        return serve.window_override
+    if long_context_policy(cfg) == "swa" and seq_len > 65536:
+        return cfg.long_context_window
+    return -1  # per-block default
+
+
+class Engine:
+    """Synchronous batched serving around a Model."""
+
+    def __init__(self, model: Model, serve: ServeConfig = ServeConfig()):
+        self.model = model
+        self.serve = serve
+        self.cfg = model.config
+        slots = cache_slots(self.cfg, serve)
+        self._prefill = jax.jit(
+            lambda p, b, w: model.prefill(p, b, slots, w),
+            static_argnums=(2,),
+        )
+        self._decode = jax.jit(
+            lambda p, c, b, w: model.decode(p, c, b, w),
+            static_argnums=(3,),
+            donate_argnums=(1,),
+        )
+
+    # ---- steps (also used by the dry-run) ----
+    def prefill_step(self, params, batch: dict, window_override: int = -1):
+        return self._prefill(params, batch, window_override)
+
+    def decode_step(self, params, cache, batch: dict, window_override: int = -1):
+        return self._decode(params, cache, batch, window_override)
+
+    # ---- sampling ----
+    def _sample_token(self, logits: Array, key: jax.Array) -> Array:
+        logits = logits[:, -1, : self.cfg.vocab_size].astype(jnp.float32)
+        if self.serve.greedy:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return jax.random.categorical(
+            key, logits / self.serve.temperature, axis=-1
+        ).astype(jnp.int32)
+
+    def generate(
+        self,
+        params,
+        prompts: Array,          # (B, S_prompt) int32
+        max_new_tokens: int,
+        extras: dict | None = None,
+        key: jax.Array | None = None,
+    ) -> Array:
+        """Prefill the prompts, then decode greedily/sampled."""
+        key = jax.random.PRNGKey(0) if key is None else key
+        batch = {"tokens": prompts, **(extras or {})}
+        wo = resolve_window(self.cfg, self.serve, prompts.shape[1] + max_new_tokens)
+        logits, cache = self.prefill_step(params, batch, wo)
+        off = self.cfg.num_meta_tokens
+        if self.cfg.family == "vlm" and extras:
+            off += extras["patches"].shape[1]
+        pos = off + prompts.shape[1]
+
+        toks = []
+        key, sub = jax.random.split(key)
+        nxt = self._sample_token(logits, sub)
+        toks.append(nxt)
+        for i in range(max_new_tokens - 1):
+            dec = {"tokens": nxt[:, None], "pos": jnp.int32(pos + i)}
+            logits, cache = self.decode_step(params, cache, dec, wo)
+            key, sub = jax.random.split(key)
+            nxt = self._sample_token(logits, sub)
+            toks.append(nxt)
+        return jnp.stack(toks, axis=1)

@@ -1,0 +1,6 @@
+from repro.training.optimizer import OptimizerConfig, apply_updates, init_state
+from repro.training.train_loop import (
+    make_diffusion_train_step,
+    make_lm_train_step,
+    train,
+)

@@ -1,0 +1,96 @@
+"""Checkpointing: flat .npz archives keyed by pytree paths.
+
+No orbax in the container; this covers save/restore of params + optimizer
+state + step with atomic writes and a retention policy.  Arrays are pulled
+to host; restore rebuilds the exact pytree structure from the key paths.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import re
+import tempfile
+from typing import Any
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(_path_str(p) for p in path)
+        flat[key] = np.asarray(jax.device_get(leaf))
+    return flat
+
+
+def _path_str(p) -> str:
+    if isinstance(p, jax.tree_util.DictKey):
+        return str(p.key)
+    if isinstance(p, jax.tree_util.SequenceKey):
+        return str(p.idx)
+    if isinstance(p, jax.tree_util.GetAttrKey):
+        return str(p.name)
+    return str(p)
+
+
+def _set_path(tree: dict, parts: list[str], value):
+    cur = tree
+    for part in parts[:-1]:
+        cur = cur.setdefault(part, {})
+    cur[parts[-1]] = value
+
+
+def save(path: str, tree: Any, step: int | None = None) -> str:
+    """Atomically write `tree` to `<path>` (.npz)."""
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    flat = _flatten(tree)
+    fd, tmp = tempfile.mkstemp(dir=os.path.dirname(path) or ".", suffix=".tmp")
+    os.close(fd)
+    try:
+        np.savez(tmp, __meta__=json.dumps({"step": step}), **flat)
+        os.replace(tmp + ".npz" if os.path.exists(tmp + ".npz") else tmp, path)
+    finally:
+        for t in (tmp, tmp + ".npz"):
+            if os.path.exists(t):
+                os.remove(t)
+    return path
+
+
+def restore(path: str) -> tuple[dict, int | None]:
+    """Load a checkpoint into a nested-dict pytree. Returns (tree, step)."""
+    with np.load(path, allow_pickle=False) as z:
+        meta = json.loads(str(z["__meta__"])) if "__meta__" in z else {}
+        tree: dict = {}
+        for key in z.files:
+            if key == "__meta__":
+                continue
+            _set_path(tree, key.split("/"), z[key])
+    return tree, meta.get("step")
+
+
+def latest(ckpt_dir: str, prefix: str = "ckpt_") -> str | None:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    best, best_step = None, -1
+    for f in os.listdir(ckpt_dir):
+        m = re.fullmatch(rf"{re.escape(prefix)}(\d+)\.npz", f)
+        if m and int(m.group(1)) > best_step:
+            best, best_step = os.path.join(ckpt_dir, f), int(m.group(1))
+    return best
+
+
+def save_rotating(
+    ckpt_dir: str, tree: Any, step: int, keep: int = 3, prefix: str = "ckpt_"
+) -> str:
+    path = os.path.join(ckpt_dir, f"{prefix}{step:08d}.npz")
+    save(path, tree, step)
+    stale = sorted(
+        f
+        for f in os.listdir(ckpt_dir)
+        if re.fullmatch(rf"{re.escape(prefix)}\d+\.npz", f)
+    )[:-keep]
+    for f in stale:
+        os.remove(os.path.join(ckpt_dir, f))
+    return path

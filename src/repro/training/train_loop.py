@@ -1,0 +1,143 @@
+"""Training loop: step builders (LM and diffusion-LM) + the host loop.
+
+``make_train_step`` returns a pure (params, opt_state, batch, rng) ->
+(params, opt_state, metrics) function suitable for jit/pjit with explicit
+shardings — the same function the multi-pod dry-run lowers.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Iterator
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.schedules import NoiseSchedule
+from repro.models.diffusion import DiffusionLM
+from repro.models.model import Model
+from repro.parallel.ctx import constrain_batch
+from repro.training import checkpoint as ckpt
+from repro.training import optimizer as opt
+
+Array = jax.Array
+
+
+def make_lm_train_step(
+    model: Model, opt_cfg: opt.OptimizerConfig, microbatches: int = 1
+) -> Callable:
+    """LM train step; ``microbatches > 1`` adds gradient accumulation
+    (lax.scan over batch slices) so long-sequence activations fit HBM."""
+
+    def grads_of(params, batch):
+        def loss_fn(p):
+            return model.loss(p, batch)
+
+        return jax.value_and_grad(loss_fn, has_aux=True)(params)
+
+    def step(params, opt_state, batch, rng):
+        del rng
+        if microbatches <= 1:
+            (loss, aux), grads = grads_of(params, batch)
+        else:
+            mb = jax.tree.map(
+                lambda x: x.reshape((microbatches, x.shape[0] // microbatches)
+                                    + x.shape[1:]),
+                batch,
+            )
+
+            def body(acc, sl):
+                sl = jax.tree.map(constrain_batch, sl)
+                (l, a), g = grads_of(params, sl)
+                acc = (
+                    acc[0] + l,
+                    jax.tree.map(jnp.add, acc[1], a),
+                    jax.tree.map(jnp.add, acc[2], g),
+                )
+                return acc, None
+
+            zero_g = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params
+            )
+            zero_a = {
+                "xent": jnp.float32(0.0),
+                "moe_aux": jnp.float32(0.0),
+                "moe_z": jnp.float32(0.0),
+            }
+            (loss, aux, grads), _ = jax.lax.scan(
+                body, (jnp.float32(0.0), zero_a, zero_g), mb
+            )
+            inv = 1.0 / microbatches
+            loss = loss * inv
+            aux = jax.tree.map(lambda x: x * inv, aux)
+            grads = jax.tree.map(lambda g: g * inv, grads)
+        params, opt_state, om = opt.apply_updates(opt_cfg, params, grads, opt_state)
+        metrics = {"loss": loss, **aux, **om}
+        return params, opt_state, metrics
+
+    return step
+
+
+def make_diffusion_train_step(
+    dlm: DiffusionLM, opt_cfg: opt.OptimizerConfig, schedule: NoiseSchedule
+) -> Callable:
+    def step(params, opt_state, batch, rng):
+        def loss_fn(p):
+            return dlm.loss(p, batch, rng, schedule)
+
+        (loss, aux), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+        params, opt_state, om = opt.apply_updates(opt_cfg, params, grads, opt_state)
+        return params, opt_state, {"loss": loss, **aux, **om}
+
+    return step
+
+
+@dataclasses.dataclass
+class TrainResult:
+    params: Any
+    opt_state: Any
+    history: list[dict]
+
+
+def train(
+    step_fn: Callable,
+    params,
+    batches: Iterator[dict],
+    num_steps: int,
+    *,
+    seed: int = 0,
+    log_every: int = 10,
+    ckpt_dir: str | None = None,
+    ckpt_every: int = 200,
+    to_device: Callable[[dict], dict] = lambda b: b,
+    print_fn: Callable[[str], None] = print,
+) -> TrainResult:
+    """Host loop: jit the step, feed batches, log, checkpoint."""
+    opt_state = opt.init_state(params)
+    step_jit = jax.jit(step_fn, donate_argnums=(0, 1))
+    key = jax.random.PRNGKey(seed)
+    history = []
+    t0 = time.perf_counter()
+    for i in range(num_steps):
+        batch = to_device(next(batches))
+        key, sub = jax.random.split(key)
+        params, opt_state, metrics = step_jit(params, opt_state, batch, sub)
+        if i % log_every == 0 or i == num_steps - 1:
+            m = {k: float(v) for k, v in metrics.items()}
+            m["step"] = i
+            m["wall_s"] = round(time.perf_counter() - t0, 2)
+            history.append(m)
+            print_fn(
+                f"step {i:5d} loss {m.get('loss', float('nan')):.4f} "
+                f"lr {m.get('lr', 0):.2e} ({m['wall_s']:.1f}s)"
+            )
+        if ckpt_dir and (i + 1) % ckpt_every == 0:
+            ckpt.save_rotating(
+                ckpt_dir, {"params": params, "opt": opt_state}, i + 1
+            )
+    if ckpt_dir:
+        ckpt.save_rotating(
+            ckpt_dir, {"params": params, "opt": opt_state}, num_steps
+        )
+    return TrainResult(params=params, opt_state=opt_state, history=history)

@@ -1,0 +1,53 @@
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import linear_schedule
+
+
+class AnalyticGaussian:
+    """Gaussian-data diffusion with closed-form optimal eps predictor.
+
+    x0 ~ N(mu, s^2 I)  =>  eps*(x,t) = (x - alpha(t) mu) sigma(t) /
+                                        (alpha^2 s^2 + sigma^2)
+    """
+
+    def __init__(self, mu=1.5, s=0.5, schedule=None):
+        self.mu, self.s = mu, s
+        self.schedule = schedule or linear_schedule()
+
+    def eps(self, x, t):
+        a = self.schedule.alpha(t)
+        sg = self.schedule.sigma(t)
+        return (x - a * self.mu) * sg / (a * a * self.s**2 + sg * sg)
+
+    def noisy(self, scale, seed=42, late_boost=4.0):
+        """eps* + noise whose magnitude grows as t->0 (paper Fig. 1)."""
+
+        def fn(x, t):
+            key = jax.random.fold_in(
+                jax.random.PRNGKey(seed), (t * 1e6).astype(jnp.int32)
+            )
+            mag = scale * (1.0 + late_boost * jnp.exp(-6.0 * t))
+            return self.eps(x, t) + mag * jax.random.normal(key, x.shape)
+
+        return fn
+
+
+@pytest.fixture(scope="session")
+def analytic():
+    return AnalyticGaussian()
+
+
+@pytest.fixture(scope="session")
+def xT():
+    return jax.random.normal(jax.random.PRNGKey(0), (64, 8))
+
+
+@pytest.fixture(scope="session")
+def reference_x0(analytic, xT):
+    from repro.core import default_config, get_solver
+
+    return get_solver("ddim")(
+        analytic.eps, xT, analytic.schedule, default_config("ddim", nfe=2000)
+    ).x0

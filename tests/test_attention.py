@@ -1,0 +1,131 @@
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from repro.models.attention import (
+    _chunked_sdpa,
+    _naive_sdpa,
+    cache_insert,
+    init_cache,
+    sdpa,
+)
+
+
+def _rand(key, *shape):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    st.integers(1, 3),           # batch
+    st.sampled_from([(4, 2), (8, 4), (6, 1)]),  # (H, KV)
+    st.integers(5, 40),          # Sq = Sk
+    st.sampled_from([16, 32]),   # hd
+    st.sampled_from([0, 7]),     # window
+    st.sampled_from([3, 16]),    # chunk
+)
+def test_chunked_matches_naive(b, heads, s, hd, window, chunk):
+    h, kv = heads
+    q = _rand(0, b, s, h, hd)
+    k = _rand(1, b, s, kv, hd)
+    v = _rand(2, b, s, kv, hd)
+    pos = jnp.arange(s)
+    ref = _naive_sdpa(q, k, v, pos, pos, window=window, causal=True, softcap=0.0)
+    got = _chunked_sdpa(
+        q, k, v, pos, pos, window=window, causal=True, softcap=0.0, chunk=chunk
+    )
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref), atol=2e-5)
+
+
+def test_invalid_slots_masked():
+    b, s, h, hd = 1, 8, 2, 16
+    q = _rand(0, b, 1, h, hd)
+    k = _rand(1, b, s, h, hd)
+    v = _rand(2, b, s, h, hd)
+    kv_pos = jnp.array([0, 1, 2, 3, -1, -1, -1, -1])
+    out_masked = sdpa(q, k, v, jnp.array([3]), kv_pos, impl="naive")
+    out_short = sdpa(
+        q, k[:, :4], v[:, :4], jnp.array([3]), kv_pos[:4], impl="naive"
+    )
+    np.testing.assert_allclose(
+        np.asarray(out_masked), np.asarray(out_short), atol=1e-5
+    )
+
+
+def test_ring_buffer_positions():
+    cache = init_cache(1, 4, 1, 8, jnp.float32)
+    for pos in range(7):
+        k = jnp.full((1, 1, 1, 8), float(pos))
+        cache = cache_insert(cache, k, k, jnp.int32(pos))
+    # slots hold positions 4,5,6,3 (ring of 4)
+    assert sorted(np.asarray(cache["pos"]).tolist()) == [3, 4, 5, 6]
+
+
+def test_protected_slots_never_evicted():
+    cache = init_cache(1, 6, 1, 4, jnp.float32)
+    for pos in range(12):
+        k = jnp.full((1, 1, 1, 4), float(pos))
+        cache = cache_insert(cache, k, k, jnp.int32(pos), protected=2)
+    pos_arr = np.asarray(cache["pos"])
+    assert pos_arr[0] == 0 and pos_arr[1] == 1  # sinks retained
+    assert set(pos_arr[2:]) == {8, 9, 10, 11}
+
+
+def test_sliding_window_with_sinks():
+    """Protected prefix stays visible outside the window."""
+    b, s, h, hd = 1, 12, 1, 8
+    q = _rand(0, b, 1, h, hd)
+    k = _rand(1, b, s, h, hd)
+    v = _rand(2, b, s, h, hd)
+    kv_pos = jnp.arange(s)
+    out = sdpa(
+        q, k, v, jnp.array([11]), kv_pos,
+        window=4, protected=2, impl="naive",
+    )
+    # equivalent dense computation over {0,1} U {8..11}
+    keep = jnp.array([0, 1, 8, 9, 10, 11])
+    out2 = sdpa(
+        q, k[:, keep], v[:, keep], jnp.array([11]), kv_pos[keep], impl="naive"
+    )
+    np.testing.assert_allclose(np.asarray(out), np.asarray(out2), atol=1e-5)
+
+
+def test_softcap_changes_scores():
+    b, s, h, hd = 1, 6, 2, 16
+    q, k, v = _rand(0, b, s, h, hd), _rand(1, b, s, h, hd), _rand(2, b, s, h, hd)
+    pos = jnp.arange(s)
+    a = sdpa(q * 10, k, v, pos, pos, impl="naive")
+    b_ = sdpa(q * 10, k, v, pos, pos, impl="naive", softcap=5.0)
+    assert float(jnp.max(jnp.abs(a - b_))) > 1e-4
+
+
+def test_int8_kv_cache_roundtrip():
+    from repro.models.attention import _dequant, _quantize
+
+    x = jax.random.normal(jax.random.PRNGKey(0), (2, 8, 4, 32)) * 3.0
+    q, s = _quantize(x)
+    back = _dequant(q, s, jnp.float32)
+    rel = float(jnp.max(jnp.abs(back - x)) / jnp.max(jnp.abs(x)))
+    assert q.dtype == jnp.int8
+    assert rel < 0.02
+
+
+def test_int8_kv_decode_matches_full():
+    """Greedy decode with int8 KV cache tracks the bf16-cache engine."""
+    from repro.configs import get_config
+    from repro.models import build_model
+    from repro.serving import Engine, ServeConfig
+
+    key = jax.random.PRNGKey(0)
+    cfg = get_config("llama3.2-1b", smoke=True)
+    m_full = build_model(cfg)
+    m_q = build_model(cfg.with_(kv_quant="int8"))
+    params = m_full.init(key)
+    prompts = jax.random.randint(key, (2, 12), 0, cfg.vocab_size)
+    t_full = Engine(m_full, ServeConfig(max_len=64)).generate(params, prompts, 10)
+    t_q = Engine(m_q, ServeConfig(max_len=64)).generate(params, prompts, 10)
+    agree = float(jnp.mean((t_full == t_q).astype(jnp.float32)))
+    assert agree >= 0.9, agree

@@ -1,0 +1,102 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.launch import hlo_analysis as H
+
+
+SYNTHETIC = """
+HloModule test
+
+%body (p: (s32[], f32[8,8])) -> (s32[], f32[8,8]) {
+  %p = (s32[], f32[8,8]{1,0}) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %x = f32[8,8]{1,0} get-tuple-element(%p), index=1
+  %w = f32[8,8]{1,0} constant({...})
+  %d = f32[8,8]{1,0} dot(%x, %w), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %ar = f32[8,8]{1,0} all-reduce(%d), replica_groups={}, to_apply=%sum
+  %one = s32[] constant(1)
+  %ni = s32[] add(%i, %one)
+  ROOT %t = (s32[], f32[8,8]{1,0}) tuple(%ni, %ar)
+}
+
+%cond (p: (s32[], f32[8,8])) -> pred[] {
+  %p = (s32[], f32[8,8]{1,0}) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %n = s32[] constant(5)
+  ROOT %lt = pred[] compare(%i, %n), direction=LT
+}
+
+%sum (a: f32[], b: f32[]) -> f32[] {
+  %a = f32[] parameter(0)
+  %b = f32[] parameter(1)
+  ROOT %s = f32[] add(%a, %b)
+}
+
+ENTRY %main (x: f32[8,8]) -> f32[8,8] {
+  %x = f32[8,8]{1,0} parameter(0)
+  %z = s32[] constant(0)
+  %t0 = (s32[], f32[8,8]{1,0}) tuple(%z, %x)
+  %w = (s32[], f32[8,8]{1,0}) while(%t0), condition=%cond, body=%body
+  ROOT %out = f32[8,8]{1,0} get-tuple-element(%w), index=1
+}
+"""
+
+
+def test_synthetic_loop_accounting():
+    res = H.analyze(SYNTHETIC)
+    # dot: 2*8*8*8 = 1024 flops, x5 loop trips
+    assert res["flops"] == 5 * 1024
+    # all-reduce result: 8*8*4 = 256 B, x5
+    assert res["collectives"]["all-reduce"] == 5 * 256
+
+
+def test_real_module_flops_exact():
+    """Known matmul inside a fori_loop: analyzer must count trips."""
+
+    def f(x, w):
+        def body(_, x):
+            return jnp.tanh(x @ w)
+
+        return jax.lax.fori_loop(0, 7, body, x)
+
+    comp = (
+        jax.jit(f)
+        .lower(
+            jax.ShapeDtypeStruct((32, 64), jnp.float32),
+            jax.ShapeDtypeStruct((64, 64), jnp.float32),
+        )
+        .compile()
+    )
+    res = H.analyze(comp.as_text())
+    expect = 7 * 2 * 32 * 64 * 64
+    assert abs(res["flops"] - expect) / expect < 0.01, res["flops"]
+
+
+def test_nested_loops_multiply():
+    def f(x, w):
+        def outer(_, x):
+            def inner(_, y):
+                return y @ w
+
+            return jax.lax.fori_loop(0, 3, inner, x)
+
+        return jax.lax.fori_loop(0, 4, outer, x)
+
+    comp = (
+        jax.jit(f)
+        .lower(
+            jax.ShapeDtypeStruct((16, 16), jnp.float32),
+            jax.ShapeDtypeStruct((16, 16), jnp.float32),
+        )
+        .compile()
+    )
+    res = H.analyze(comp.as_text())
+    expect = 12 * 2 * 16 * 16 * 16
+    assert abs(res["flops"] - expect) / expect < 0.01, res["flops"]
+
+
+def test_shape_bytes():
+    assert H._shape_bytes_of_type("f32[2,3]") == 24
+    assert H._shape_bytes_of_type("bf16[10]") == 20
+    assert H._shape_bytes_of_type("(s32[], f32[4,4])") == 4 + 64

@@ -1,0 +1,173 @@
+"""Pallas kernels vs pure-jnp oracles — shape/dtype sweeps (deliverable c).
+
+All kernels run in interpret mode on CPU; the same call sites compile for
+TPU unchanged.
+"""
+
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from repro.core.era import AM4
+from repro.core.lagrange import lagrange_weights
+from repro.kernels import ops, ref
+
+
+def _rand(seed, shape, dtype=jnp.float32):
+    x = jax.random.normal(jax.random.PRNGKey(seed), shape, jnp.float32)
+    return x.astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+FLASH_CASES = [
+    # (B, H, KV, Sq, Sk, hd, window, causal, softcap, dtype)
+    (2, 4, 2, 128, 128, 64, 0, True, 0.0, jnp.float32),
+    (1, 8, 8, 256, 256, 128, 0, False, 0.0, jnp.float32),
+    (2, 4, 1, 100, 100, 48, 0, True, 0.0, jnp.float32),       # MQA + ragged
+    (1, 6, 3, 130, 130, 80, 32, True, 0.0, jnp.float32),      # window
+    (1, 4, 4, 64, 64, 64, 16, True, 0.0, jnp.bfloat16),       # bf16
+    (2, 2, 2, 96, 96, 64, 0, True, 30.0, jnp.float32),        # softcap
+]
+
+
+@pytest.mark.parametrize("case", FLASH_CASES)
+def test_flash_attention_vs_ref(case):
+    b, h, kv, sq, sk, hd, window, causal, cap, dtype = case
+    q = _rand(0, (b, sq, h, hd), dtype)
+    k = _rand(1, (b, sk, kv, hd), dtype)
+    v = _rand(2, (b, sk, kv, hd), dtype)
+    qpos, kpos = jnp.arange(sq), jnp.arange(sk)
+    out = ops.flash_attention(
+        q, k, v, qpos, kpos, window=window, causal=causal, softcap=cap
+    )
+    r = ref.flash_attention_ref(
+        q.transpose(0, 2, 1, 3).astype(jnp.float32),
+        k.transpose(0, 2, 1, 3).astype(jnp.float32),
+        v.transpose(0, 2, 1, 3).astype(jnp.float32),
+        qpos, kpos, window=window, causal=causal, softcap=cap,
+    ).transpose(0, 2, 1, 3)
+    atol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(r, np.float32), atol=atol
+    )
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    st.integers(1, 2),
+    st.sampled_from([(2, 1), (4, 2), (4, 4)]),
+    st.integers(17, 150),
+    st.sampled_from([32, 64, 96]),
+    st.sampled_from([0, 24]),
+)
+def test_flash_attention_hypothesis(b, heads, s, hd, window):
+    h, kv = heads
+    q = _rand(3, (b, s, h, hd))
+    k = _rand(4, (b, s, kv, hd))
+    v = _rand(5, (b, s, kv, hd))
+    pos = jnp.arange(s)
+    out = ops.flash_attention(q, k, v, pos, pos, window=window)
+    r = ref.flash_attention_ref(
+        q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+        v.transpose(0, 2, 1, 3), pos, pos, window=window,
+    ).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(r), atol=3e-5)
+
+
+# ---------------------------------------------------------------------------
+# decode attention
+# ---------------------------------------------------------------------------
+
+DECODE_CASES = [
+    (2, 8, 2, 256, 64, 0, 0, jnp.float32),
+    (1, 4, 4, 300, 128, 64, 0, jnp.float32),
+    (2, 6, 3, 200, 80, 32, 4, jnp.float32),
+    (1, 25, 5, 130, 64, 48, 8, jnp.float32),   # hymba head counts
+    (2, 8, 1, 256, 64, 0, 0, jnp.bfloat16),
+]
+
+
+@pytest.mark.parametrize("case", DECODE_CASES)
+def test_decode_attention_vs_ref(case):
+    b, h, kv, s, hd, window, prot, dtype = case
+    q = _rand(0, (b, h, hd), dtype)
+    k = _rand(1, (b, s, kv, hd), dtype)
+    v = _rand(2, (b, s, kv, hd), dtype)
+    kv_pos = jnp.where(jnp.arange(s) < s - 10, jnp.arange(s), -1)
+    qpos = jnp.int32(s - 11)
+    out = ops.decode_attention(
+        q, k, v, qpos, kv_pos, window=window, protected=prot
+    )
+    r = ref.decode_attention_ref(
+        q.astype(jnp.float32),
+        k.transpose(0, 2, 1, 3).astype(jnp.float32),
+        v.transpose(0, 2, 1, 3).astype(jnp.float32),
+        qpos, kv_pos, window=window, protected=prot,
+    )
+    atol = 3e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(r, np.float32), atol=atol
+    )
+
+
+def test_decode_matches_flash_single_row():
+    """Decode kernel == flash kernel with Sq=1 on the same cache."""
+    b, h, kv, s, hd = 1, 4, 2, 128, 64
+    q = _rand(0, (b, h, hd))
+    k = _rand(1, (b, s, kv, hd))
+    v = _rand(2, (b, s, kv, hd))
+    kv_pos = jnp.arange(s)
+    qpos = jnp.int32(s - 1)
+    dec = ops.decode_attention(q, k, v, qpos, kv_pos)
+    fl = ops.flash_attention(
+        q[:, None], k, v, jnp.array([s - 1]), kv_pos, causal=True
+    )[:, 0]
+    np.testing.assert_allclose(np.asarray(dec), np.asarray(fl), atol=3e-5)
+
+
+# ---------------------------------------------------------------------------
+# fused ERA update
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=10, deadline=None)
+@given(
+    st.integers(2, 6),                     # k order
+    st.sampled_from([(64,), (3, 17, 5), (2, 130)]),
+    st.sampled_from([64, 256]),
+)
+def test_era_step_vs_ref(k_order, shape, block):
+    x = _rand(0, shape)
+    eps_sel = _rand(1, (k_order,) + shape)
+    t_sel = jnp.linspace(0.9, 0.2, k_order)
+    e_hist = _rand(2, (3,) + shape)
+    t_next = jnp.float32(0.15)
+    cx, ce = jnp.float32(0.97), jnp.float32(-0.05)
+    am4 = jnp.asarray(AM4, jnp.float32)
+    xn, eb = ops.era_step(x, eps_sel, t_sel, e_hist, t_next, cx, ce, am4, block=block)
+    w = lagrange_weights(t_sel, t_next)
+    xr, er = ref.era_update_ref(
+        x.reshape(-1), eps_sel.reshape(k_order, -1), w,
+        e_hist.reshape(3, -1), am4, cx, ce,
+    )
+    np.testing.assert_allclose(np.asarray(xn).reshape(-1), np.asarray(xr), atol=2e-5)
+    np.testing.assert_allclose(np.asarray(eb).reshape(-1), np.asarray(er), atol=2e-5)
+
+
+def test_era_combine_drop_in():
+    from repro.core.era import era_combine as core_combine
+
+    k_order = 4
+    eps_sel = _rand(1, (k_order, 8, 4))
+    t_sel = jnp.array([0.9, 0.7, 0.5, 0.3])
+    e_hist = _rand(2, (3, 8, 4))
+    t_next = jnp.float32(0.25)
+    eb1, ec1 = core_combine(eps_sel, t_sel, e_hist, t_next)
+    eb2, ec2 = ops.era_combine(eps_sel, t_sel, e_hist, t_next)
+    np.testing.assert_allclose(np.asarray(eb1), np.asarray(eb2), atol=2e-5)
+    np.testing.assert_allclose(np.asarray(ec1), np.asarray(ec2), atol=2e-5)

@@ -1,0 +1,101 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import ERAConfig, linear_schedule
+from repro.models import build_model
+from repro.models.diffusion import DiffusionLM
+from repro.serving import (
+    Engine,
+    SampleRequest,
+    SamplerService,
+    ServeConfig,
+    cache_slots,
+    resolve_window,
+)
+
+KEY = jax.random.PRNGKey(0)
+
+
+def test_generate_basic():
+    cfg = get_config("llama3.2-1b", smoke=True)
+    m = build_model(cfg)
+    eng = Engine(m, ServeConfig(max_len=128))
+    params = m.init(KEY)
+    prompts = jax.random.randint(KEY, (2, 10), 0, cfg.vocab_size)
+    toks = eng.generate(params, prompts, 6)
+    assert toks.shape == (2, 6)
+    assert int(jnp.max(toks)) < cfg.vocab_size
+
+
+def test_greedy_deterministic():
+    cfg = get_config("qwen2-1.5b", smoke=True)
+    m = build_model(cfg)
+    eng = Engine(m, ServeConfig(max_len=64))
+    params = m.init(KEY)
+    prompts = jax.random.randint(KEY, (1, 8), 0, cfg.vocab_size)
+    a = eng.generate(params, prompts, 5, key=jax.random.PRNGKey(1))
+    b = eng.generate(params, prompts, 5, key=jax.random.PRNGKey(2))
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_windowed_decode_matches_full_within_window():
+    """With prompt+gen <= window, ring-buffer decode == full attention."""
+    cfg = get_config("llama3.2-1b", smoke=True)
+    m = build_model(cfg)
+    params = m.init(KEY)
+    prompts = jax.random.randint(KEY, (1, 8), 0, cfg.vocab_size)
+    full = Engine(m, ServeConfig(max_len=64)).generate(params, prompts, 6)
+    ring = Engine(m, ServeConfig(max_len=64, window_override=32)).generate(
+        params, prompts, 6
+    )
+    np.testing.assert_array_equal(np.asarray(full), np.asarray(ring))
+
+
+def test_long_decode_beyond_window_runs():
+    cfg = get_config("minitron-4b", smoke=True)
+    m = build_model(cfg)
+    params = m.init(KEY)
+    eng = Engine(m, ServeConfig(max_len=512, window_override=16))
+    prompts = jax.random.randint(KEY, (1, 48), 0, cfg.vocab_size)
+    toks = eng.generate(params, prompts, 40)  # far beyond the 16-slot ring
+    assert toks.shape == (1, 40)
+
+
+def test_cache_slots_policy():
+    cfg = get_config("mixtral-8x7b")          # native SWA 4096
+    assert cache_slots(cfg, ServeConfig(max_len=100000)) == 4096
+    dense = get_config("deepseek-67b")
+    assert cache_slots(dense, ServeConfig(max_len=4096)) == 4096
+    assert resolve_window(dense, ServeConfig(), 524288) == dense.long_context_window
+    assert resolve_window(cfg, ServeConfig(), 4096) == -1
+
+
+def test_sampler_service_solver_choice():
+    cfg = get_config("qwen2-1.5b", smoke=True)
+    dlm = DiffusionLM(build_model(cfg))
+    params = dlm.init(KEY)
+    sched = linear_schedule()
+    outs = {}
+    for solver in ("ddim", "era"):
+        sc = ERAConfig(nfe=6, k=3) if solver == "era" else None
+        svc = SamplerService(dlm, sched, solver, sc)
+        x0, info = svc.sample(params, SampleRequest(batch=2, seq_len=8, nfe=6))
+        assert x0.shape == (2, 8, cfg.d_model)
+        assert not bool(jnp.any(jnp.isnan(x0)))
+        outs[solver] = np.asarray(x0)
+    assert np.max(np.abs(outs["ddim"] - outs["era"])) > 1e-6  # different paths
+
+
+def test_sample_program_lowerable():
+    """The whole ERA sampling loop lowers as one XLA program."""
+    cfg = get_config("llama3.2-1b", smoke=True)
+    dlm = DiffusionLM(build_model(cfg))
+    svc = SamplerService(dlm, linear_schedule(), "era", ERAConfig(nfe=6, k=3))
+    prog = svc.sample_program()
+    aparams = dlm.init_abstract()
+    x = jax.ShapeDtypeStruct((2, 8, cfg.d_model), jnp.float32)
+    lowered = jax.jit(prog).lower(aparams, x)
+    assert lowered.compile() is not None

@@ -1,0 +1,171 @@
+"""Solver behaviour on the analytic diffusion (exact eps oracle) —
+convergence, budget accounting, and the paper's error-robustness claims."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    ERAConfig,
+    SolverConfig,
+    default_config,
+    get_solver,
+    solver_names,
+)
+
+
+def rmse(a, b):
+    return float(jnp.sqrt(jnp.mean((a - b) ** 2)))
+
+
+@pytest.mark.parametrize("name", solver_names())
+def test_all_solvers_run_and_converge(name, analytic, xT, reference_x0):
+    cfg = default_config(name, nfe=20)
+    out = get_solver(name)(analytic.eps, xT, analytic.schedule, cfg)
+    assert out.x0.shape == xT.shape
+    assert not bool(jnp.any(jnp.isnan(out.x0)))
+    assert rmse(out.x0, reference_x0) < 0.12, name
+
+
+@pytest.mark.parametrize("name", ["ddim", "explicit_adams", "era"])
+def test_error_decreases_with_nfe(name, analytic, xT, reference_x0):
+    errs = [
+        rmse(
+            get_solver(name)(
+                analytic.eps, xT, analytic.schedule, default_config(name, nfe=n)
+            ).x0,
+            reference_x0,
+        )
+        for n in (5, 10, 40)
+    ]
+    assert errs[2] < errs[0]
+
+
+def test_high_order_beats_ddim(analytic, xT, reference_x0):
+    e = {}
+    for name in ("ddim", "era", "explicit_adams"):
+        out = get_solver(name)(
+            analytic.eps, xT, analytic.schedule, default_config(name, nfe=10)
+        )
+        e[name] = rmse(out.x0, reference_x0)
+    assert e["era"] < e["ddim"] / 5
+    assert e["explicit_adams"] < e["ddim"]
+
+
+def test_nfe_budget_exact(analytic, xT):
+    """1-eval-per-step solvers report exactly `nfe`; PECE reports 2/step."""
+    for name in ("ddim", "explicit_adams", "era", "dpm_solver_fast"):
+        out = get_solver(name)(
+            analytic.eps, xT, analytic.schedule, default_config(name, nfe=8)
+        )
+        assert int(out.nfe) == 8, name
+    out = get_solver("implicit_adams_pece")(
+        analytic.eps, xT, analytic.schedule, default_config("implicit_adams_pece", nfe=8)
+    )
+    assert int(out.nfe) == 7  # 4 steps x 2 evals, final-step eval skipped
+
+
+def test_era_fused_kernel_path_matches(analytic, xT):
+    plain = get_solver("era")(
+        analytic.eps, xT, analytic.schedule, ERAConfig(nfe=10, k=4)
+    )
+    fused = get_solver("era")(
+        analytic.eps, xT, analytic.schedule,
+        ERAConfig(nfe=10, k=4, use_fused_update=True),
+    )
+    np.testing.assert_allclose(
+        np.asarray(plain.x0), np.asarray(fused.x0), atol=2e-5
+    )
+
+
+def test_delta_eps_detects_injected_error(analytic, xT):
+    """The error measure (Eq. 15) detects estimation error at sampling
+    time: injected noise lifts delta_eps an order of magnitude over the
+    clean-oracle baseline (paper Fig. 3's diagnostic property)."""
+    k = 4
+    cfg = ERAConfig(nfe=20, k=k, error_norm="mean")
+    clean = np.asarray(
+        get_solver("era")(analytic.eps, xT, analytic.schedule, cfg)
+        .aux["delta_eps_history"]
+    )
+    noisy = np.asarray(
+        get_solver("era")(analytic.noisy(0.08), xT, analytic.schedule, cfg)
+        .aux["delta_eps_history"]
+    )
+    assert noisy[k:-1].mean() > 5.0 * clean[k:-1].mean()
+
+
+def test_ers_rescues_high_order(analytic, xT, reference_x0):
+    """Paper Table 4: fixed selection diverges at k=6; ERS stays stable."""
+    noisy = analytic.noisy(0.05)
+    errs = {}
+    for sel in ("fixed", "ers"):
+        out = get_solver("era")(
+            noisy, xT, analytic.schedule,
+            ERAConfig(nfe=20, k=6, lam=5.0, selection=sel, error_norm="mean"),
+        )
+        errs[sel] = rmse(out.x0, reference_x0)
+    assert errs["ers"] < errs["fixed"] / 2, errs
+
+
+def test_const_power_ablation_runs(analytic, xT):
+    out = get_solver("era")(
+        analytic.eps, xT, analytic.schedule,
+        ERAConfig(nfe=12, k=3, selection="const", const_power=2.0),
+    )
+    assert not bool(jnp.any(jnp.isnan(out.x0)))
+
+
+def test_solver_under_jit(analytic, xT):
+    cfg = ERAConfig(nfe=10, k=4)
+    f = jax.jit(
+        lambda x: get_solver("era")(analytic.eps, x, analytic.schedule, cfg).x0
+    )
+    out = f(xT)
+    assert not bool(jnp.any(jnp.isnan(out)))
+
+
+def test_trajectory_recording(analytic, xT):
+    cfg = ERAConfig(nfe=8, k=3, return_trajectory=True)
+    out = get_solver("era")(analytic.eps, xT, analytic.schedule, cfg)
+    traj = out.aux["trajectory"]
+    assert traj.shape == (9,) + xT.shape
+    np.testing.assert_allclose(np.asarray(traj[-1]), np.asarray(out.x0), atol=1e-5)
+
+
+def test_per_sample_ers_isolates_batch_noise(analytic, xT, reference_x0):
+    """Beyond-paper: per-sample ERS — a noisy batch-mate must not degrade
+    clean samples' selection (the paper's scalar delta_eps is shared)."""
+    import jax
+
+    def hetero(x, t):
+        key = jax.random.fold_in(
+            jax.random.PRNGKey(7), (t * 1e6).astype(jnp.int32)
+        )
+        mag = 0.02 * (1.0 + 4.0 * jnp.exp(-6.0 * t))
+        noise = mag * jax.random.normal(key, x.shape)
+        b = x.shape[0]
+        scale = jnp.where(jnp.arange(b) < b // 2, 1.0, 5.0)[:, None]
+        return analytic.eps(x, t) + scale * noise
+
+    def clean_rmse(cfg):
+        out = get_solver("era")(hetero, xT, analytic.schedule, cfg)
+        err = jnp.sqrt(jnp.mean((out.x0 - reference_x0) ** 2, axis=-1))
+        return float(jnp.mean(err[: xT.shape[0] // 2]))
+
+    shared = clean_rmse(ERAConfig(nfe=15, k=5, lam=2.0, error_norm="mean"))
+    per_sample = clean_rmse(ERAConfig(nfe=15, k=5, lam=2.0, per_sample=True))
+    assert per_sample < shared * 0.5, (per_sample, shared)
+
+
+def test_dpm_solver_pp2m_converges(analytic, xT, reference_x0):
+    """DPM-Solver++(2M) (the paper's Appendix-E baseline): 1 NFE/step,
+    2nd order, stable at tiny NFE where singlestep DPM-Solver collapses."""
+    for nfe in (5, 10):
+        out = get_solver("dpm_solver_pp2m")(
+            analytic.eps, xT, analytic.schedule,
+            default_config("dpm_solver_pp2m", nfe=nfe),
+        )
+        assert int(out.nfe) == nfe
+        assert rmse(out.x0, reference_x0) < 0.05, nfe

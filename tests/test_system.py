@@ -1,0 +1,97 @@
+"""End-to-end behaviour of the paper's system: train a denoiser, sample with
+every solver, and verify the paper's headline orderings hold on a model with
+*real* (learned, imperfect) noise estimates — the regime ERA-Solver targets.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import ERAConfig, default_config, get_solver, linear_schedule
+from repro.data import DataConfig, GaussianMixtureLatents
+from repro.models import build_model
+from repro.models.diffusion import DiffusionLM
+from repro.training import OptimizerConfig, make_diffusion_train_step, train
+
+
+@pytest.fixture(scope="module")
+def trained():
+    """A small diffusion-LM trained briefly on a known mixture."""
+    cfg = get_config("llama3.2-1b", smoke=True)
+    dlm = DiffusionLM(build_model(cfg))
+    params = dlm.init(jax.random.PRNGKey(0))
+    sched = linear_schedule()
+    dc = DataConfig(vocab_size=1, seq_len=8, batch_size=16, kind="diffusion",
+                    d_model=cfg.d_model, num_modes=2, seed=3)
+    data = GaussianMixtureLatents(dc)
+    step = make_diffusion_train_step(
+        dlm, OptimizerConfig(lr=2e-3, warmup_steps=5, total_steps=80), sched
+    )
+    res = train(step, params, data.batches(), 80, log_every=1000,
+                print_fn=lambda s: None)
+    return dlm, res.params, sched, data, cfg
+
+
+def _sample(trained, solver, nfe, **kw):
+    dlm, params, sched, data, cfg = trained
+    xT = jax.random.normal(jax.random.PRNGKey(7), (32, 8, cfg.d_model))
+    conf = (
+        ERAConfig(nfe=nfe, **kw) if solver == "era"
+        else default_config(solver, nfe=nfe)
+    )
+    return get_solver(solver)(dlm.eps_fn(params), xT, sched, conf).x0
+
+
+def _ref(trained):
+    """Fine-grained DDIM on the same trained model = solver ground truth."""
+    dlm, params, sched, data, cfg = trained
+    xT = jax.random.normal(jax.random.PRNGKey(7), (32, 8, cfg.d_model))
+    return get_solver("ddim")(
+        dlm.eps_fn(params), xT, sched, default_config("ddim", nfe=400)
+    ).x0
+
+
+def test_all_solvers_finite_on_trained_model(trained):
+    for solver in ("ddim", "explicit_adams", "dpm_solver_fast", "era"):
+        x0 = _sample(trained, solver, 10, **({"k": 3} if solver == "era" else {}))
+        assert not bool(jnp.any(jnp.isnan(x0))), solver
+
+
+def test_era_beats_high_order_peers_at_low_nfe(trained):
+    """Paper Tables 1-3 ordering on learned noise estimates: at NFE=10,
+    ERA beats the other high-order solvers (implicit-Adams PECE at matched
+    cost, DPM-Solver-fast) and stays within range of DDIM on a metric that
+    structurally favors DDIM (the reference is a fine DDIM run —
+    EXPERIMENTS.md discusses the bias)."""
+    ref = _ref(trained)
+    err = {}
+    for solver in ("ddim", "implicit_adams_pece", "dpm_solver_fast", "era"):
+        x0 = _sample(trained, solver, 10, **({"k": 3} if solver == "era" else {}))
+        err[solver] = float(jnp.sqrt(jnp.mean((x0 - ref) ** 2)))
+    assert err["era"] < err["implicit_adams_pece"], err
+    assert err["era"] < err["dpm_solver_fast"], err
+    assert err["era"] < 1.6 * err["ddim"], err
+
+
+def test_high_order_regime_dependence(trained):
+    """Interpolation-order stability on a real trained model: k=6 degrades
+    badly for BOTH selection strategies here (this under-trained model's
+    error is iid-like, the regime where EXPERIMENTS.md shows ERS cannot
+    help — its advantage needs the paper's structured, t-correlated error,
+    reproduced in test_solvers.py::test_ers_rescues_high_order).  The
+    production-relevant assertion: the paper's recommended low orders stay
+    an order of magnitude more accurate than k=6."""
+    ref = _ref(trained)
+
+    def err(k, sel):
+        x0 = _sample(trained, "era", 20, k=k, lam=5.0, selection=sel,
+                     error_norm="mean")
+        return float(jnp.sqrt(jnp.mean((x0 - ref) ** 2)))
+
+    e3 = err(3, "ers")
+    e6_fixed = err(6, "fixed")
+    e6_ers = err(6, "ers")
+    assert np.isfinite(e6_ers) and np.isfinite(e6_fixed)
+    assert e3 * 5 < min(e6_fixed, e6_ers), (e3, e6_fixed, e6_ers)

@@ -1,0 +1,91 @@
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import build_model
+from repro.training import OptimizerConfig, make_lm_train_step
+from repro.training import checkpoint as ck
+from repro.training import optimizer as opt
+
+
+def test_adamw_quadratic_converges():
+    cfg = OptimizerConfig(lr=0.1, warmup_steps=0, total_steps=200, schedule="constant", weight_decay=0.0)
+    params = {"w": jnp.array([3.0, -2.0])}
+    state = opt.init_state(params)
+    target = jnp.array([1.0, 1.0])
+    for _ in range(200):
+        grads = {"w": 2 * (params["w"] - target)}
+        params, state, _ = opt.apply_updates(cfg, params, grads, state)
+    np.testing.assert_allclose(np.asarray(params["w"]), [1.0, 1.0], atol=1e-2)
+
+
+def test_grad_clipping():
+    cfg = OptimizerConfig(lr=1e-3, grad_clip=1.0, warmup_steps=0)
+    params = {"w": jnp.zeros(4)}
+    state = opt.init_state(params)
+    huge = {"w": jnp.full(4, 1e6)}
+    _, _, m = opt.apply_updates(cfg, params, huge, state)
+    assert float(m["grad_norm"]) > 1e5  # reported pre-clip
+
+
+def test_no_weight_decay_on_vectors():
+    cfg = OptimizerConfig(lr=0.1, weight_decay=1.0, warmup_steps=0, schedule="constant")
+    params = {"scale": jnp.ones(8), "w": jnp.ones((8, 8))}
+    state = opt.init_state(params)
+    zero = jax.tree.map(jnp.zeros_like, params)
+    p2, _, _ = opt.apply_updates(cfg, params, zero, state)
+    np.testing.assert_allclose(np.asarray(p2["scale"]), 1.0)      # untouched
+    assert float(jnp.max(p2["w"])) < 1.0                           # decayed
+
+
+def test_lr_schedule_shapes():
+    cfg = OptimizerConfig(lr=1.0, warmup_steps=10, total_steps=100, schedule="cosine")
+    lrs = [float(opt.lr_at(cfg, jnp.int32(s))) for s in (0, 5, 10, 55, 100)]
+    assert lrs[0] == 0.0
+    assert abs(lrs[1] - 0.5) < 1e-6       # mid warmup
+    assert abs(lrs[2] - 1.0) < 1e-6       # end warmup
+    assert 0 < lrs[3] < 1.0
+    assert lrs[4] < 1e-6                  # decayed out
+
+
+def test_microbatching_matches_full_batch():
+    """mu=1 and mu=4 produce (numerically) the same update."""
+    cfg = get_config("llama3.2-1b", smoke=True)
+    m = build_model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    batch = {
+        "tokens": jax.random.randint(jax.random.PRNGKey(1), (8, 16), 0, cfg.vocab_size)
+    }
+    ocfg = OptimizerConfig(lr=1e-3, warmup_steps=0, total_steps=10)
+    outs = {}
+    for mu in (1, 4):
+        step = make_lm_train_step(m, ocfg, microbatches=mu)
+        p2, _, metrics = jax.jit(step)(
+            params, opt.init_state(params), batch, jax.random.PRNGKey(2)
+        )
+        outs[mu] = (p2, float(metrics["loss"]))
+    assert abs(outs[1][1] - outs[4][1]) < 1e-3
+    for a, b in zip(jax.tree.leaves(outs[1][0]), jax.tree.leaves(outs[4][0])):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=5e-4)
+
+
+def test_checkpoint_roundtrip_and_rotation():
+    tree = {
+        "params": {"w": np.arange(6, dtype=np.float32).reshape(2, 3)},
+        "opt": {"step": np.int32(7)},
+    }
+    with tempfile.TemporaryDirectory() as d:
+        for step in (1, 2, 3, 4):
+            ck.save_rotating(d, tree, step, keep=2)
+        files = sorted(os.listdir(d))
+        assert files == ["ckpt_00000003.npz", "ckpt_00000004.npz"]
+        latest = ck.latest(d)
+        got, step = ck.restore(latest)
+        assert step == 4
+        np.testing.assert_array_equal(got["params"]["w"], tree["params"]["w"])
+        assert int(got["opt"]["step"]) == 7
