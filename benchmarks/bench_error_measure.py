@@ -2,7 +2,6 @@
 the true (injected / learned) noise-estimation error trend over steps."""
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.core import ERAConfig, get_solver

@@ -1,0 +1,67 @@
+"""Serving-engine benchmark: per-request latency and throughput of the
+batched ERA sampling engine (`repro.serving.BatchedSampler`) at batch sizes
+1 / 8 / 64.
+
+Each scenario submits `bs` single-sample requests, drains them as one fused
+batch (per-sample ERS, fused Pallas step), and reports:
+
+  * lat_ms  — mean submit->result latency per request
+  * thpt    — samples per second over the drain wall time
+
+The first drain per bucket compiles; a warmup drain is excluded from the
+timed runs, so numbers reflect the steady compiled path.
+"""
+
+import time
+
+from benchmarks import common as C
+from repro.serving import BatchedSampler, SampleRequest
+
+
+def run() -> None:
+    dlm, params, data, cfg = C.trained_model(30 if C.SMOKE else 150)
+    nfe = 6 if C.SMOKE else 10
+    seq = 8
+    batch_sizes = (1, 8) if C.SMOKE else (1, 8, 64)
+    engine = BatchedSampler(
+        dlm, C.SCHEDULE, batch_buckets=tuple(batch_sizes)
+    )
+
+    for bs in batch_sizes:
+        def drain_once(offset: int):
+            tickets = [
+                engine.submit(
+                    SampleRequest(batch=1, seq_len=seq, nfe=nfe, seed=offset + i)
+                )
+                for i in range(bs)
+            ]
+            t0 = time.perf_counter()
+            results = engine.drain(params)
+            wall = time.perf_counter() - t0
+            return tickets, results, wall
+
+        drain_once(0)  # compile warmup for this bucket
+        repeats = 1 if C.SMOKE else 3
+        best_wall, lat = float("inf"), 0.0
+        for r in range(repeats):
+            tickets, results, wall = drain_once(1000 * (r + 1))
+            if wall < best_wall:
+                best_wall = wall
+                lat = sum(results[t].latency_s for t in tickets) / bs
+        thpt = bs / best_wall
+        C.emit(
+            f"serving/era/bs{bs}",
+            best_wall * 1e6,
+            f"lat_ms={lat * 1e3:.2f},thpt={thpt:.1f}/s",
+        )
+
+    # compile-cache sanity: one program per bucket regardless of traffic
+    C.emit(
+        "serving/era/compiled_buckets",
+        float(len(engine.compile_cache())),
+        f"buckets={sorted(k[2] for k in engine.compile_cache())}",
+    )
+
+
+if __name__ == "__main__":
+    run()

@@ -7,7 +7,6 @@ low NFE (5-20) against DDIM / explicit Adams (PNDM) / DPM-Solver.
 """
 
 import jax
-import jax.numpy as jnp
 
 from benchmarks import common as C
 

@@ -1,20 +1,22 @@
 """Paper Table 7: sampling wall time by solver and NFE.  Also isolates the
 solver overhead (Lagrange buffer + selection math) from network-eval time by
-timing against a zero-cost eps function."""
+timing against a zero-cost eps function, and compares the fused Pallas ERA
+step (the default) against the pure-jnp combine at serving batch sizes."""
 
 import jax
-import jax.numpy as jnp
 
 from benchmarks import common as C
+from repro.core import ERAConfig, get_solver
 
 
 def run() -> None:
-    dlm, params, data, cfg = C.trained_model()
+    dlm, params, data, cfg = C.trained_model(30 if C.SMOKE else 150)
     eps_fn = dlm.eps_fn(params)
     xT = jax.random.normal(jax.random.PRNGKey(0), (8, 8, cfg.d_model))
 
+    nfes = (15,) if C.SMOKE else (15, 25, 50)
     for solver in ("ddim", "explicit_adams", "dpm_solver_fast", "era"):
-        for nfe in (15, 25, 50):
+        for nfe in nfes:
             kw = {"k": 4} if solver == "era" else {}
             fn = jax.jit(lambda x: C.solve(eps_fn, x, solver, nfe, **kw))
             dt = C.timer(fn, xT)
@@ -23,13 +25,33 @@ def run() -> None:
 
     # solver overhead alone: eps == identity (no network)
     null_eps = lambda x, t: x
-    big = jax.random.normal(jax.random.PRNGKey(1), (4, 256, 256))
+    side = 64 if C.SMOKE else 256
+    big = jax.random.normal(jax.random.PRNGKey(1), (4, side, side))
     for solver in ("ddim", "era"):
         kw = {"k": 4} if solver == "era" else {}
         fn = jax.jit(lambda x: C.solve(null_eps, x, solver, 20, **kw))
         dt = C.timer(fn, big)
         C.emit(f"table7/overhead/{solver}/nfe20", dt * 1e6,
                f"per_step_us={dt / 20 * 1e6:.1f}")
+
+    # fused Pallas step (default) vs pure-jnp combine, serving batch sizes
+    nfe = 8 if C.SMOKE else 20
+    batch_sizes = (1, 8) if C.SMOKE else (1, 8, 64)
+    for bs in batch_sizes:
+        x = jax.random.normal(jax.random.PRNGKey(2), (bs, 8, cfg.d_model))
+        for fused in (True, False):
+            conf = ERAConfig(nfe=nfe, k=4, use_fused_update=fused)
+            fn = jax.jit(
+                lambda x, c=conf: get_solver("era")(
+                    eps_fn, x, C.SCHEDULE, c
+                ).x0
+            )
+            dt = C.timer(fn, x)
+            tag = "fused" if fused else "jnp"
+            C.emit(
+                f"table7/step_path/{tag}/bs{bs}", dt * 1e6,
+                f"per_req_ms={dt / bs * 1e3:.2f}",
+            )
 
 
 if __name__ == "__main__":

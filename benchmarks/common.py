@@ -40,6 +40,9 @@ from repro.training import (
 
 ART = os.path.join(os.path.dirname(__file__), "..", "artifacts")
 SCHEDULE = linear_schedule()
+# CI smoke mode: tiny shapes / few repeats so the whole suite runs in
+# seconds on a CPU runner (Pallas kernels in interpret mode)
+SMOKE = os.environ.get("REPRO_BENCH_SMOKE", "") == "1"
 
 
 class AnalyticMixture:

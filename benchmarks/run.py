@@ -21,6 +21,7 @@ def main() -> None:
         bench_ablation_scale,
         bench_error_measure,
         bench_renoise_error,
+        bench_serving,
         bench_solver_quality,
         bench_walltime,
         roofline,
@@ -33,8 +34,12 @@ def main() -> None:
         "error_measure": bench_error_measure.run,     # Fig 3
         "renoise_error": bench_renoise_error.run,     # Appendix C
         "walltime": bench_walltime.run,               # Table 7
+        "serving": bench_serving.run,                 # batched engine lat/thpt
         "roofline": roofline.run,                     # deliverable (g)
     }
+    if args.only and args.only not in suites:
+        print(f"unknown suite {args.only!r}; available: {sorted(suites)}")
+        sys.exit(2)
     failed = []
     for name, fn in suites.items():
         if args.only and name != args.only:

@@ -92,8 +92,23 @@ def main() -> None:
     var_err = float(np.linalg.norm(got.var(0) - var) / np.linalg.norm(var))
     print(f"ERA-Solver @ NFE={args.nfe}: mean-err {mu_err:.3f}, "
           f"var-err {var_err:.3f} (vs data moments)")
-    print(f"delta_eps history: "
+    print("delta_eps history: "
           f"{np.asarray(out.aux['delta_eps_history'])[3:].round(3).tolist()}")
+
+    # --- the same model behind the batched serving engine ---
+    from repro.serving import BatchedSampler, SampleRequest
+
+    engine = BatchedSampler(dlm, sched, batch_buckets=(1, 8))
+    tickets = [
+        engine.submit(SampleRequest(batch=1, seq_len=seq, nfe=args.nfe, seed=s))
+        for s in range(4)
+    ]
+    results = engine.drain(res.params)
+    lat = sum(results[t].latency_s for t in tickets) / len(tickets)
+    print(f"batched engine: {len(tickets)} requests fused to "
+          f"batch {results[tickets[0]].padded_batch}, "
+          f"mean latency {lat * 1e3:.1f} ms "
+          f"({len(engine.compile_cache())} compiled bucket)")
 
 
 if __name__ == "__main__":

@@ -65,7 +65,7 @@ def main() -> None:
     prompts = jnp.asarray(rng.integers(0, cfg.vocab_size, (1, 100)), jnp.int32)
     toks = eng.generate(params, prompts, 64, key=key)
     print(f"{'llama3.2-1b (SWA-32)':22s} [ring  ] -> {tuple(toks.shape)} "
-          f"(decoded 64 tokens through a 32-slot ring cache)")
+          "(decoded 64 tokens through a 32-slot ring cache)")
 
 
 if __name__ == "__main__":

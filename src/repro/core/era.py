@@ -19,12 +19,23 @@ the Lagrange buffer fills):
 
 The final iteration skips step 5/6 (the sample is finished), so a run with N
 steps costs exactly N NFE (1 initial eval + N-1 in-loop evals).
+
+Engine notes (serving path):
+
+* The loop is a single ``jax.lax.scan`` over the step grid, so one jit
+  compile covers a whole (sample-shape, nfe, k) bucket and XLA can reuse the
+  Lagrange buffers in place.
+* :func:`sample_scan` takes the eps/t buffers as explicit arguments so a
+  jitting caller (``repro.serving.BatchedSampler``) can donate them.
+* Steps 2-4 default to the fused Pallas kernel
+  (``repro.kernels.era_update``) — one HBM round trip per operand instead of
+  ~(k+5) — with automatic ``interpret=True`` fallback off-TPU and a
+  pure-jnp fallback if Pallas itself is unavailable.
 """
 
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any
 
 import jax
@@ -39,8 +50,7 @@ from repro.core.solver_base import (
     buffer_append,
     buffer_init,
     ddim_step,
-    trajectory_append,
-    trajectory_init,
+    step_grid,
 )
 
 Array = jax.Array
@@ -58,10 +68,35 @@ class ERAConfig(SolverConfig):
     selection: str = "ers"         # "ers" | "fixed" | "const"
     const_power: float = 1.0       # used when selection == "const"
     error_norm: str = "global"     # "global" (Eq. 15) | "mean" (per-sample mean)
-    use_fused_update: bool = False # route step 2-4 through the Pallas kernel
+    use_fused_update: bool = True  # route step 2-4 through the Pallas kernel
     # beyond-paper: independent delta_eps + base selection per batch element
     # (the paper shares one scalar across the batch)
     per_sample: bool = False
+
+
+_FUSED_OK: dict[str, bool] = {}
+_FUSED_TOL = 1e-5
+
+
+def _fused_ops():
+    """The Pallas wrapper module, or None when the fused path is unusable.
+
+    Unusable means Pallas missing OR the kernel failing the one-time (per
+    process, per backend) numerics parity probe against the pure-jnp
+    reference — every ERA entry point shares this gate, so a misbehaving
+    kernel degrades to the jnp combine instead of silently wrong samples.
+    """
+    try:
+        from repro.kernels import ops as _kops
+    except Exception:  # missing pallas / unsupported backend
+        return None
+    backend = jax.default_backend()
+    if backend not in _FUSED_OK:
+        try:
+            _FUSED_OK[backend] = _kops.fused_step_parity() <= _FUSED_TOL
+        except Exception:
+            _FUSED_OK[backend] = False
+    return _kops if _FUSED_OK[backend] else None
 
 
 def _delta_eps(e_obs: Array, e_pred: Array, mode: str) -> Array:
@@ -96,9 +131,32 @@ def era_combine(
     return eps_bar, eps_corr
 
 
+def alloc_buffers(x: Array, config: ERAConfig) -> tuple[Array, Array]:
+    """Fresh Lagrange eps/t buffers sized for ``config.nfe`` steps.
+
+    Callers that jit :func:`sample_scan` can allocate these outside the
+    compiled function and donate them (``donate_argnums``) — the scan then
+    updates them in place for the whole sampling run.
+    """
+    return buffer_init(x, config.nfe + 1, config.solver_dtype)
+
+
 def sample(
     eps_fn: EpsFn,
     x_init: Array,
+    schedule: NoiseSchedule,
+    config: ERAConfig,
+) -> SolverOutput:
+    """Self-contained entry: allocates buffers, then runs the scan loop."""
+    eps_buf, t_buf = alloc_buffers(x_init, config)
+    return sample_scan(eps_fn, x_init, eps_buf, t_buf, schedule, config)
+
+
+def sample_scan(
+    eps_fn: EpsFn,
+    x_init: Array,
+    eps_buf: Array,      # (nfe+1, *x.shape) zeros, donatable
+    t_buf: Array,        # (nfe+1,) zeros, donatable
     schedule: NoiseSchedule,
     config: ERAConfig,
 ) -> SolverOutput:
@@ -106,18 +164,18 @@ def sample(
     k = config.k
     if n < k:
         raise ValueError(f"ERA-Solver needs nfe >= k ({n} < {k})")
+    if eps_buf.shape != (n + 1,) + x_init.shape:
+        raise ValueError(
+            f"eps buffer shape {eps_buf.shape} != {(n + 1,) + x_init.shape}"
+        )
+    if t_buf.shape != (n + 1,):
+        raise ValueError(f"t buffer shape {t_buf.shape} != {(n + 1,)}")
     ts = timesteps(schedule, n, config.scheme, t_end=config.t_end)
     dt = config.solver_dtype
-
-    if config.use_fused_update:
-        from repro.kernels import ops as _kops  # deferred; optional dep
-
-        combine = functools.partial(_kops.era_combine, am4=AM4)
-    else:
-        combine = era_combine
+    kops = _fused_ops() if config.use_fused_update else None
+    am4 = jnp.asarray(AM4, jnp.float32)
 
     x = x_init.astype(dt)
-    eps_buf, t_buf = buffer_init(x, n + 1, dt)
     # Alg. 1 line 2/3: delta_eps initialized to lambda (power = 1, uniform
     # selection); initial observation appended at index 0.
     e0 = eps_fn(x, ts[0]).astype(dt)
@@ -127,8 +185,6 @@ def sample(
         if config.per_sample
         else jnp.float32(config.lam)
     )
-    traj = trajectory_init(x, n, config.return_trajectory)
-    de_hist = jnp.zeros((n,), jnp.float32)  # Fig. 3 diagnostic
 
     def warm_branch(ops):
         x, eps_buf, t_buf, de, i, t_cur, t_next = ops
@@ -157,30 +213,44 @@ def sample(
             eps_sel = jax.vmap(
                 lambda tau_b, buf_b: jnp.take(buf_b, tau_b, axis=0),
                 in_axes=(0, 1),
-                out_axes=1,
-            )(tau, eps_buf)                                  # (k, B, ...)
-            w = jax.vmap(lagrange.lagrange_weights, in_axes=(0, None))(
-                t_sel, t_next
-            )                                                # (B, k)
-            wb = w.T.reshape((k,) + (eps_sel.shape[1],) + (1,) * (eps_sel.ndim - 2))
-            eps_bar = jnp.sum(wb.astype(eps_sel.dtype) * eps_sel, axis=0)
-            c0, c1, c2, c3 = AM4
-            eps_corr = (
-                c0 * eps_bar + c1 * e_hist[0] + c2 * e_hist[1] + c3 * e_hist[2]
+                out_axes=0,
+            )(tau, eps_buf)                                  # (B, k, ...)
+            e_hist_b = jnp.moveaxis(e_hist, 1, 0)            # (B, 3, ...)
+            if kops is not None:
+                # fused per-sample step: vmap the Pallas kernel over the
+                # batch (each element carries its own Lagrange nodes)
+                cx, ce = schedule.ddim_coeffs(t_cur, t_next)
+                x_next, eps_bar = jax.vmap(
+                    lambda xb, es, tn, eh: kops.era_step(
+                        xb, es, tn, eh, t_next, cx, ce, am4
+                    )
+                )(x, eps_sel, t_sel, e_hist_b)
+                return x_next, eps_bar
+            eps_bar, eps_corr = jax.vmap(
+                era_combine, in_axes=(0, 0, 0, None)
+            )(eps_sel, t_sel, e_hist_b, t_next)
+            x_next = ddim_step(schedule, x, eps_corr, t_cur, t_next)
+            return x_next, eps_bar
+        tau = lagrange.select_bases(
+            i, k, de, config.lam, config.selection, config.const_power
+        )
+        t_sel = jnp.take(t_buf, tau, axis=0)
+        eps_sel = jnp.take(eps_buf, tau, axis=0)
+        if kops is not None:
+            # fused step: predictor combine + AM4 corrector + DDIM x-update
+            # in one HBM pass
+            cx, ce = schedule.ddim_coeffs(t_cur, t_next)
+            x_next, eps_bar = kops.era_step(
+                x, eps_sel, t_sel, e_hist, t_next, cx, ce, am4
             )
-        else:
-            tau = lagrange.select_bases(
-                i, k, de, config.lam, config.selection, config.const_power
-            )
-            t_sel = jnp.take(t_buf, tau, axis=0)
-            eps_sel = jnp.take(eps_buf, tau, axis=0)
-            eps_bar, eps_corr = combine(eps_sel, t_sel, e_hist, t_next)
+            return x_next, eps_bar
+        eps_bar, eps_corr = era_combine(eps_sel, t_sel, e_hist, t_next)
         x_next = ddim_step(schedule, x, eps_corr, t_cur, t_next)
         return x_next, eps_bar
 
-    def body(i, carry):
-        x, eps_buf, t_buf, de, traj, de_hist = carry
-        t_cur, t_next = ts[i], ts[i + 1]
+    def step(carry, inp):
+        x, eps_buf, t_buf, de = carry
+        i, t_cur, t_next = inp
         ops = (x, eps_buf, t_buf, de, i, t_cur, t_next)
         x_next, eps_bar = jax.lax.cond(i < k - 1, warm_branch, main_branch, ops)
 
@@ -200,15 +270,16 @@ def sample(
         e_new, de_new = jax.lax.cond(i + 1 < n, observe, skip, None)
         # Alg. 1 line 16: delta_eps only updates once predictions are real.
         de = jnp.where(i >= k - 1, de_new, de)
-        de_hist = de_hist.at[i].set(jnp.mean(de))
         eps_buf, t_buf = buffer_append(eps_buf, t_buf, i + 1, e_new, t_next)
-        traj = trajectory_append(traj, i + 1, x_next)
-        return (x_next, eps_buf, t_buf, de, traj, de_hist)
+        traj_x = x_next if config.return_trajectory else None
+        return (x_next, eps_buf, t_buf, de), (jnp.mean(de), traj_x)
 
-    x, eps_buf, t_buf, delta_eps, traj, de_hist = jax.lax.fori_loop(
-        0, n, body, (x, eps_buf, t_buf, delta_eps, traj, de_hist)
+    (x, eps_buf, t_buf, delta_eps), (de_hist, traj_tail) = jax.lax.scan(
+        step, (x, eps_buf, t_buf, delta_eps), step_grid(ts)
     )
     aux: dict[str, Any] = {"delta_eps_history": de_hist}
-    if traj is not None:
-        aux["trajectory"] = traj
+    if config.return_trajectory:
+        aux["trajectory"] = jnp.concatenate(
+            [x_init.astype(dt)[None], traj_tail], axis=0
+        )
     return SolverOutput(x0=x.astype(x_init.dtype), nfe=jnp.int32(n), aux=aux)

@@ -4,7 +4,10 @@ A *solver* turns a pretrained noise-prediction network ``eps_fn(x, t) -> eps``
 (t a scalar, broadcast over the batch) plus a :class:`NoiseSchedule` and a
 timestep grid into a sampling loop.  Every solver here is a pure function of
 its inputs and is jit/pjit-compatible: buffers are fixed-size, control flow is
-``lax.fori_loop`` / ``lax.cond``, and nothing syncs to the host.
+``lax.scan`` / ``lax.fori_loop`` / ``lax.cond``, and nothing syncs to the
+host.  Fixed-capacity buffers are allocated up front (:func:`buffer_init`)
+so a jitting caller can donate them and the whole run compiles once per
+(sample-shape, nfe) bucket.
 """
 
 from __future__ import annotations
@@ -73,6 +76,17 @@ def buffer_append(
         t_buf, jnp.asarray(t, t_buf.dtype), idx, axis=0
     )
     return eps_buf, t_buf
+
+
+def step_grid(ts: Array) -> tuple[Array, Array, Array]:
+    """Scan inputs for an n-step loop over the (n+1,) time grid ``ts``.
+
+    Returns ``(i, t_cur, t_next)`` arrays of length n — the per-step xs for
+    a ``lax.scan`` solver loop (one compile covers the whole grid; the carry
+    reuses the solver buffers in place).
+    """
+    n = ts.shape[0] - 1
+    return jnp.arange(n, dtype=jnp.int32), ts[:-1], ts[1:]
 
 
 def trajectory_init(x: Array, num_steps: int, enabled: bool) -> Array | None:

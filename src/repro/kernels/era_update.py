@@ -10,6 +10,12 @@ into a VMEM tile, and x_{i+1} / eps_bar are written once.
 Grid: 1-D over flattened-sample blocks.  Scalar operands (Lagrange weights,
 AM4 coefficients, DDIM cx/ce) ride in SMEM via PrefetchScalarGridSpec so
 they are resident before the tile loop starts.
+
+This kernel is the *default* ERA step path (``ERAConfig.use_fused_update``):
+``repro.kernels.ops.era_step`` auto-selects ``interpret=True`` off-TPU, and
+``repro.kernels.ops.fused_step_parity`` gates its numerics against the
+pure-jnp reference combine.  Per-sample ERS batches vmap this kernel (the
+pallas batching rule prepends a grid dimension).
 """
 
 from __future__ import annotations

@@ -128,6 +128,9 @@ def era_step(
     """Fused ERA step on arbitrary-shaped samples. Returns (x_next, eps_bar)."""
     shape = x.shape
     n = x.size
+    # shrink the block for small samples (e.g. per-sample vmap tiles) so the
+    # pad-to-block waste stays bounded; 128 keeps TPU lanes full
+    block = max(128, min(block, 1 << max(n - 1, 1).bit_length()))
     lag_w = lagrange_weights(t_sel, t_next)
     xf = _pad_to(x.reshape(-1), block, 0)
     es = _pad_to(eps_sel.reshape(eps_sel.shape[0], -1), block, 1)
@@ -152,3 +155,31 @@ def era_combine(eps_sel, t_sel, e_hist, t_next, am4=None):
     )
     # with cx=0, ce=1 the kernel's x_next equals eps_corr
     return eps_bar, x_next
+
+
+def fused_step_parity(
+    shape: tuple[int, ...] = (4, 96),
+    k: int = 4,
+    seed: int = 0,
+) -> float:
+    """Max abs error of the fused `era_step` vs the reference combine + DDIM
+    update on a random probe — the numerics gate for the fused default path
+    (runs in interpret mode off-TPU).  Returns the error; callers decide the
+    tolerance (1e-5 is comfortable in f32)."""
+    from repro.core.era import AM4, era_combine
+
+    keys = jax.random.split(jax.random.PRNGKey(seed), 3)
+    x = jax.random.normal(keys[0], shape, jnp.float32)
+    eps_sel = jax.random.normal(keys[1], (k,) + shape, jnp.float32)
+    e_hist = jax.random.normal(keys[2], (3,) + shape, jnp.float32)
+    t_sel = jnp.linspace(0.9, 0.3, k)
+    t_next = jnp.float32(0.25)
+    cx, ce = jnp.float32(0.97), jnp.float32(-0.05)
+    am4 = jnp.asarray(AM4, jnp.float32)
+    x_next, eps_bar = era_step(x, eps_sel, t_sel, e_hist, t_next, cx, ce, am4)
+    eb_ref, ec_ref = era_combine(eps_sel, t_sel, e_hist, t_next)
+    x_ref = cx * x + ce * ec_ref
+    err = jnp.maximum(
+        jnp.max(jnp.abs(x_next - x_ref)), jnp.max(jnp.abs(eps_bar - eb_ref))
+    )
+    return float(err)

@@ -15,7 +15,6 @@ decode all share one code path.
 
 from __future__ import annotations
 
-from typing import Any
 
 import jax
 import jax.numpy as jnp

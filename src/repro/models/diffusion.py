@@ -12,7 +12,6 @@ Training objective: Eq. 5 of the paper (simplified eps-matching loss).
 from __future__ import annotations
 
 import dataclasses
-from typing import Any
 
 import jax
 import jax.numpy as jnp

@@ -19,8 +19,7 @@ mLSTM/sLSTM interleave, Hymba's full/SWA mix) are tuples of segments.
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Any, Callable
+from typing import Any
 
 import jax
 import jax.numpy as jnp

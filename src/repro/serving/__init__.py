@@ -1,2 +1,20 @@
-from repro.serving.diffusion_sampler import SampleRequest, SamplerService
+from repro.serving.diffusion_sampler import (
+    BatchedSampler,
+    SampleRequest,
+    SampleResult,
+    SamplerService,
+    fused_path_ok,
+)
 from repro.serving.engine import Engine, ServeConfig, cache_slots, resolve_window
+
+__all__ = [
+    "BatchedSampler",
+    "Engine",
+    "SampleRequest",
+    "SampleResult",
+    "SamplerService",
+    "ServeConfig",
+    "cache_slots",
+    "fused_path_ok",
+    "resolve_window",
+]

@@ -1,11 +1,28 @@
 """Diffusion sampling service: ERA-Solver (or any registered solver) driving
-a DiffusionLM denoiser — the paper's deployment shape.
+a DiffusionLM denoiser — the paper's deployment shape, grown into a
+request-batching engine.
 
-One `SamplerService.sample()` call runs the full solver loop as a single
-jitted XLA program (fori_loop over NFE steps, one backbone eval per step for
-ERA/DDIM/Adams).  The service also exposes `sample_step_lowerable`, the
-entry the dry-run lowers to prove the solver itself distributes (the
-Lagrange buffer shards with the latents; the ERS scalar state replicates).
+Architecture:
+
+* :class:`BatchedSampler` — the engine.  ``submit()`` enqueues requests;
+  ``drain()`` groups them by (seq_len, nfe), pads each group's batch up to a
+  shape bucket, and runs the whole solver loop as ONE jitted XLA program per
+  bucket (``jax.lax.scan`` over NFE steps inside; eps/t Lagrange buffers
+  donated on accelerator backends).  The jit cache is keyed by bucket, so a
+  steady request stream compiles exactly once per (sample-shape, nfe, k)
+  bucket no matter how request batch sizes fluctuate.
+* Per-request isolation inside a fused batch comes from per-sample ERS
+  (``ERAConfig.per_sample=True``, the engine default for ERA): every sample
+  row measures its own delta_eps and selects its own Lagrange bases, so a
+  batch-of-N run is equivalent to N independent runs.  Configs with the
+  paper's shared scalar delta_eps couple the batch, so the engine serves
+  them one exact-size request at a time instead of fusing.
+* The fused Pallas step is the default path; core gates it with a one-time
+  per-backend numerics parity probe (``era._fused_ops`` /
+  ``kernels.ops.fused_step_parity``) and falls back to the pure-jnp combine
+  if the kernel misbehaves — ``fused_path_ok()`` reports the outcome.
+* :class:`SamplerService` — the original one-call facade, now a thin wrapper
+  over the engine with exact-size buckets (no padding).
 """
 
 from __future__ import annotations
@@ -18,9 +35,16 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import ERAConfig, NoiseSchedule, SolverConfig, get_solver
+from repro.core import era as era_mod
 from repro.models.diffusion import DiffusionLM
 
 Array = jax.Array
+
+def fused_path_ok() -> bool:
+    """Is the fused Pallas step active on this backend?  (The parity gate
+    itself lives in core — `era._fused_ops` — so every ERA entry point is
+    covered; this is the serving-side introspection hook.)"""
+    return era_mod._fused_ops() is not None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -32,7 +56,194 @@ class SampleRequest:
     seed: int = 0
 
 
+@dataclasses.dataclass
+class SampleResult:
+    """Per-request output of a drained batch."""
+
+    x0: Array                # (batch, seq_len, d_model)
+    aux: dict[str, Any]      # solver diagnostics (shared across the batch)
+    latency_s: float         # submit -> result wall time
+    batch_wall_s: float      # wall time of the fused batch this rode in
+    padded_batch: int        # bucket size the batch ran at
+
+
+class BatchedSampler:
+    """Request-batching diffusion sampling engine (submit/drain)."""
+
+    def __init__(
+        self,
+        dlm: DiffusionLM,
+        schedule: NoiseSchedule,
+        solver: str = "era",
+        solver_config: SolverConfig | None = None,
+        batch_buckets: tuple[int, ...] | None = (1, 8, 64),
+    ):
+        self.dlm = dlm
+        self.schedule = schedule
+        self.solver_name = solver
+        if solver_config is None:
+            # per-sample ERS isolates co-batched requests from each other
+            solver_config = (
+                ERAConfig(per_sample=True) if solver == "era" else SolverConfig()
+            )
+        self.solver_config = solver_config
+        self.batch_buckets = tuple(sorted(batch_buckets)) if batch_buckets else None
+        self._jitted: dict[Any, Any] = {}
+        self._pending: list[tuple[int, SampleRequest, float]] = []
+        self._next_ticket = 0
+
+    # ---- request queue -------------------------------------------------
+    def submit(self, req: SampleRequest) -> int:
+        """Enqueue a request; returns its ticket for the drain() result map.
+
+        Invalid requests are rejected here, not at drain time — a bad
+        request must not poison the queue for its co-batched neighbours.
+        """
+        if req.batch < 1:
+            raise ValueError(f"batch must be >= 1, got {req.batch}")
+        k = getattr(self.solver_config, "k", None)
+        if k is not None and req.nfe < k:
+            raise ValueError(
+                f"ERA-Solver needs nfe >= k ({req.nfe} < {k}); "
+                "lower k in the engine's solver_config or raise nfe"
+            )
+        ticket = self._next_ticket
+        self._next_ticket += 1
+        self._pending.append((ticket, req, time.perf_counter()))
+        return ticket
+
+    @property
+    def pending(self) -> int:
+        return len(self._pending)
+
+    def drain(self, params) -> dict[int, SampleResult]:
+        """Run all pending requests, fused per (seq_len, nfe) shape bucket."""
+        groups: dict[tuple[int, int], list[tuple[int, SampleRequest, float]]] = {}
+        for item in self._pending:
+            _, req, _ = item
+            groups.setdefault((req.seq_len, req.nfe), []).append(item)
+        self._pending = []
+
+        results: dict[int, SampleResult] = {}
+        max_bucket = self.batch_buckets[-1] if self.batch_buckets else None
+        # ERA with a shared (non-per-sample) delta_eps couples every batch
+        # row through one global error norm — fusing strangers or adding pad
+        # rows would change each request's result, so such configs are
+        # served one exact-size request at a time instead
+        fusable = (
+            not isinstance(self.solver_config, ERAConfig)
+            or self.solver_config.per_sample
+        )
+        for (seq_len, nfe), items in groups.items():
+            if not fusable:
+                for item in items:
+                    self._run_chunk(
+                        params, seq_len, nfe, [item], results, pad=False
+                    )
+                continue
+            chunk: list[tuple[int, SampleRequest, float]] = []
+            total = 0
+            for item in items:
+                b = item[1].batch
+                if chunk and max_bucket and total + b > max_bucket:
+                    self._run_chunk(params, seq_len, nfe, chunk, results)
+                    chunk, total = [], 0
+                chunk.append(item)
+                total += b
+            if chunk:
+                self._run_chunk(params, seq_len, nfe, chunk, results)
+        return results
+
+    # ---- fused execution -----------------------------------------------
+    def _bucket_batch(self, n: int) -> int:
+        if not self.batch_buckets:
+            return n
+        for b in self.batch_buckets:
+            if n <= b:
+                return b
+        return n  # oversize request: exact-size compile
+
+    def _run_chunk(self, params, seq_len, nfe, chunk, results, pad=True) -> None:
+        d = self.dlm.config.d_model
+        total = sum(req.batch for _, req, _ in chunk)
+        padded = self._bucket_batch(total) if pad else total
+        parts = [
+            jax.random.normal(
+                jax.random.PRNGKey(req.seed),
+                (req.batch, seq_len, d),
+                jnp.float32,
+            )
+            for _, req, _ in chunk
+        ]
+        if padded > total:
+            parts.append(jnp.zeros((padded - total, seq_len, d), jnp.float32))
+        x_init = jnp.concatenate(parts, axis=0)
+
+        cfg = dataclasses.replace(self.solver_config, nfe=nfe)
+        run = self._runner(cfg, padded, seq_len)
+        t0 = time.perf_counter()
+        if self.solver_name == "era":
+            eps_buf, t_buf = era_mod.alloc_buffers(x_init, cfg)
+            x0, aux = run(params, x_init, eps_buf, t_buf)
+        else:
+            x0, aux = run(params, x_init)
+        x0 = jax.block_until_ready(x0)
+        wall = time.perf_counter() - t0
+
+        done = time.perf_counter()
+        off = 0
+        for ticket, req, t_submit in chunk:
+            results[ticket] = SampleResult(
+                x0=x0[off : off + req.batch],
+                aux=aux,
+                latency_s=done - t_submit,
+                batch_wall_s=wall,
+                padded_batch=padded,
+            )
+            off += req.batch
+
+    def _runner(self, cfg: SolverConfig, batch: int, seq_len: int):
+        """One jitted program per (config, padded-batch, seq_len) bucket."""
+        key = (self.solver_name, cfg, batch, seq_len)
+        if key not in self._jitted:
+            if self.solver_name == "era":
+
+                def run(params, x_init, eps_buf, t_buf):
+                    out = era_mod.sample_scan(
+                        self.dlm.eps_fn(params),
+                        x_init,
+                        eps_buf,
+                        t_buf,
+                        self.schedule,
+                        cfg,
+                    )
+                    return out.x0, out.aux
+
+                # donate x + Lagrange buffers so XLA reuses them in place
+                # (CPU ignores donation and would warn, so gate it)
+                donate = (1, 2, 3) if jax.default_backend() != "cpu" else ()
+                self._jitted[key] = jax.jit(run, donate_argnums=donate)
+            else:
+                sample_fn = get_solver(self.solver_name)
+
+                def run(params, x_init):
+                    out = sample_fn(
+                        self.dlm.eps_fn(params), x_init, self.schedule, cfg
+                    )
+                    return out.x0, out.aux
+
+                self._jitted[key] = jax.jit(run)
+        return self._jitted[key]
+
+    # ---- introspection (tests / benchmarks) ----------------------------
+    def compile_cache(self) -> dict[Any, Any]:
+        """Bucket-key -> jitted runner map (each compiles exactly once)."""
+        return dict(self._jitted)
+
+
 class SamplerService:
+    """One-call facade over :class:`BatchedSampler` (exact-size buckets)."""
+
     def __init__(
         self,
         dlm: DiffusionLM,
@@ -43,39 +254,18 @@ class SamplerService:
         self.dlm = dlm
         self.schedule = schedule
         self.solver_name = solver
-        self.solver_config = solver_config or (
-            ERAConfig() if solver == "era" else SolverConfig()
+        if solver_config is None:
+            solver_config = ERAConfig() if solver == "era" else SolverConfig()
+        self.solver_config = solver_config
+        self._engine = BatchedSampler(
+            dlm, schedule, solver, solver_config, batch_buckets=None
         )
-        self._jitted: dict[Any, Any] = {}
-
-    def _runner(self, cfg_key):
-        if cfg_key not in self._jitted:
-            sample_fn = get_solver(self.solver_name)
-            cfg = self.solver_config
-
-            def run(params, x_init):
-                out = sample_fn(
-                    self.dlm.eps_fn(params), x_init, self.schedule, cfg
-                )
-                return out.x0, out.aux
-
-            self._jitted[cfg_key] = jax.jit(run)
-        return self._jitted[cfg_key]
 
     def sample(self, params, req: SampleRequest) -> tuple[Array, dict]:
         """Generate req.batch sequences of latents via the solver."""
-        key = jax.random.PRNGKey(req.seed)
-        x_init = jax.random.normal(
-            key, (req.batch, req.seq_len, self.dlm.config.d_model), jnp.float32
-        )
-        cfg = dataclasses.replace(self.solver_config, nfe=req.nfe)
-        self.solver_config = cfg
-        run = self._runner((req.nfe, req.batch, req.seq_len))
-        t0 = time.perf_counter()
-        x0, aux = run(params, x_init)
-        x0 = jax.block_until_ready(x0)
-        wall = time.perf_counter() - t0
-        return x0, {"wall_s": wall, **aux}
+        ticket = self._engine.submit(req)
+        res = self._engine.drain(params)[ticket]
+        return res.x0, {"wall_s": res.batch_wall_s, **res.aux}
 
     # ---- dry-run hook: the full solver loop as one lowerable program ----
     def sample_program(self):

@@ -1,9 +1,7 @@
-import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
-from hypothesis import given, settings
+from _hypothesis_compat import given, settings, st
 
 from repro.models.attention import (
     _chunked_sdpa,
@@ -114,7 +112,9 @@ def test_int8_kv_cache_roundtrip():
 
 
 def test_int8_kv_decode_matches_full():
-    """Greedy decode with int8 KV cache tracks the bf16-cache engine."""
+    """int8 KV cache keeps decode logits within quantization noise of the
+    full-precision cache (same token stream fed to both engines — token
+    agreement on an untrained model is argmax-fragile and proves nothing)."""
     from repro.configs import get_config
     from repro.models import build_model
     from repro.serving import Engine, ServeConfig
@@ -125,7 +125,21 @@ def test_int8_kv_decode_matches_full():
     m_q = build_model(cfg.with_(kv_quant="int8"))
     params = m_full.init(key)
     prompts = jax.random.randint(key, (2, 12), 0, cfg.vocab_size)
-    t_full = Engine(m_full, ServeConfig(max_len=64)).generate(params, prompts, 10)
-    t_q = Engine(m_q, ServeConfig(max_len=64)).generate(params, prompts, 10)
-    agree = float(jnp.mean((t_full == t_q).astype(jnp.float32)))
-    assert agree >= 0.9, agree
+    eng_f = Engine(m_full, ServeConfig(max_len=64))
+    eng_q = Engine(m_q, ServeConfig(max_len=64))
+    batch = {"tokens": prompts}
+    lf, cf = eng_f.prefill_step(params, batch)
+    lq, cq = eng_q.prefill_step(params, batch)
+    pos = cfg.num_meta_tokens + prompts.shape[1]
+    for i in range(6):
+        nxt = jnp.argmax(
+            lf[:, -1, : cfg.vocab_size].astype(jnp.float32), axis=-1
+        ).astype(jnp.int32)
+        dec = {"tokens": nxt[:, None], "pos": jnp.int32(pos + i)}
+        lf, cf = eng_f.decode_step(params, cf, dec)
+        lq, cq = eng_q.decode_step(params, cq, dec)
+        scale = float(jnp.max(jnp.abs(lf)).astype(jnp.float32)) + 1e-6
+        err = float(jnp.max(jnp.abs(lf - lq)).astype(jnp.float32)) / scale
+        # ~2% per-tensor int8 noise compounds across layers and steps;
+        # a scale/layout bug would blow past 1.0
+        assert err < 0.2, (i, err)

@@ -1,0 +1,165 @@
+"""Batched sampling engine: fused-step parity, compile-once-per-bucket, and
+batch-of-N == N-independent-runs equivalence (per-sample ERS on)."""
+
+import types
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import ERAConfig, get_solver
+from repro.kernels import ops
+from repro.serving import BatchedSampler, SampleRequest, fused_path_ok
+
+D_MODEL = 8
+
+
+class OracleDenoiser:
+    """DiffusionLM-shaped wrapper around the analytic eps oracle, so engine
+    tests are exact and fast (no network params)."""
+
+    def __init__(self, analytic):
+        self.analytic = analytic
+        self.config = types.SimpleNamespace(d_model=D_MODEL)
+
+    def eps_fn(self, params):
+        return self.analytic.eps
+
+
+@pytest.fixture()
+def engine(analytic):
+    return BatchedSampler(
+        OracleDenoiser(analytic), analytic.schedule, batch_buckets=(2, 4, 8)
+    )
+
+
+# ---------------------------------------------------------------------------
+# fused default path numerics (acceptance: <= 1e-5 in f32, interpret mode)
+# ---------------------------------------------------------------------------
+
+
+def test_fused_step_parity_within_1e5():
+    for shape in ((4, 96), (2, 8, 8), (130,)):
+        for k in (3, 4, 6):
+            err = ops.fused_step_parity(shape=shape, k=k)
+            assert err <= 1e-5, (shape, k, err)
+
+
+def test_fused_path_ok_gate():
+    assert fused_path_ok()
+
+
+# ---------------------------------------------------------------------------
+# batched engine semantics
+# ---------------------------------------------------------------------------
+
+
+def test_submit_drain_shapes_and_metadata(engine, analytic):
+    t1 = engine.submit(SampleRequest(batch=1, seq_len=6, nfe=8, seed=1))
+    t2 = engine.submit(SampleRequest(batch=3, seq_len=6, nfe=8, seed=2))
+    assert engine.pending == 2
+    results = engine.drain(params=None)
+    assert engine.pending == 0
+    assert set(results) == {t1, t2}
+    assert results[t1].x0.shape == (1, 6, D_MODEL)
+    assert results[t2].x0.shape == (3, 6, D_MODEL)
+    # 1 + 3 samples pad to the 4-bucket, fused into one batch
+    assert results[t1].padded_batch == 4
+    assert results[t1].batch_wall_s == results[t2].batch_wall_s
+    assert results[t1].latency_s >= results[t1].batch_wall_s
+    for res in results.values():
+        assert not bool(jnp.any(jnp.isnan(res.x0)))
+        assert "delta_eps_history" in res.aux
+
+
+def test_batch_of_n_equals_independent_runs(engine, analytic):
+    """Co-batched requests (per-sample ERS) match solo ERA-Solver runs."""
+    seeds = [3, 4, 5]
+    tickets = {
+        s: engine.submit(SampleRequest(batch=1, seq_len=6, nfe=10, seed=s))
+        for s in seeds
+    }
+    results = engine.drain(params=None)
+    cfg = ERAConfig(nfe=10, per_sample=True)
+    for s in seeds:
+        x_init = jax.random.normal(
+            jax.random.PRNGKey(s), (1, 6, D_MODEL), jnp.float32
+        )
+        solo = get_solver("era")(analytic.eps, x_init, analytic.schedule, cfg)
+        np.testing.assert_allclose(
+            np.asarray(results[tickets[s]].x0),
+            np.asarray(solo.x0),
+            atol=1e-5,
+        )
+
+
+def test_compile_once_per_bucket(engine):
+    """Fluctuating request sizes within one bucket reuse one XLA program."""
+    for seed, batch in enumerate((1, 2, 1, 2, 1)):
+        engine.submit(SampleRequest(batch=batch, seq_len=6, nfe=8, seed=seed))
+        engine.drain(params=None)
+    cache = engine.compile_cache()
+    assert len(cache) == 1  # batches 1 and 2 share the 2-bucket
+    (runner,) = cache.values()
+    assert runner._cache_size() == 1  # jit traced/compiled exactly once
+
+
+def test_distinct_buckets_compile_separately(engine):
+    engine.submit(SampleRequest(batch=1, seq_len=6, nfe=8, seed=0))
+    engine.submit(SampleRequest(batch=1, seq_len=4, nfe=8, seed=1))
+    engine.submit(SampleRequest(batch=1, seq_len=6, nfe=12, seed=2))
+    res = engine.drain(params=None)
+    assert len(res) == 3
+    assert len(engine.compile_cache()) == 3  # (seq 6, 8) / (seq 4, 8) / (seq 6, 12)
+
+
+def test_oversize_request_chunks_to_max_bucket(engine):
+    big = engine.submit(SampleRequest(batch=5, seq_len=6, nfe=8, seed=0))
+    small = engine.submit(SampleRequest(batch=2, seq_len=6, nfe=8, seed=1))
+    res = engine.drain(params=None)
+    assert res[big].x0.shape == (5, 6, D_MODEL)
+    assert res[small].x0.shape == (2, 6, D_MODEL)
+
+
+def test_shared_delta_config_not_fused(analytic):
+    """Paper-default (shared delta_eps) configs couple the batch through one
+    global error norm, so the engine must serve them unfused and unpadded —
+    each request's result matches a solo run of exactly that request."""
+    eng = BatchedSampler(
+        OracleDenoiser(analytic),
+        analytic.schedule,
+        solver_config=ERAConfig(per_sample=False),
+        batch_buckets=(8,),
+    )
+    t1 = eng.submit(SampleRequest(batch=2, seq_len=6, nfe=10, seed=11))
+    t2 = eng.submit(SampleRequest(batch=1, seq_len=6, nfe=10, seed=12))
+    results = eng.drain(params=None)
+    assert results[t1].padded_batch == 2  # exact size, no pad, no fusion
+    assert results[t2].padded_batch == 1
+    for seed, ticket, batch in ((11, t1, 2), (12, t2, 1)):
+        x_init = jax.random.normal(
+            jax.random.PRNGKey(seed), (batch, 6, D_MODEL), jnp.float32
+        )
+        solo = get_solver("era")(
+            analytic.eps, x_init, analytic.schedule, ERAConfig(nfe=10)
+        )
+        np.testing.assert_allclose(
+            np.asarray(results[ticket].x0), np.asarray(solo.x0), atol=1e-5
+        )
+
+
+def test_padding_rows_do_not_leak(engine, analytic):
+    """A request fused with pad rows equals the same request run alone."""
+    t = engine.submit(SampleRequest(batch=1, seq_len=6, nfe=8, seed=7))
+    padded = engine.drain(params=None)[t]
+    assert padded.padded_batch == 2
+    solo_engine = BatchedSampler(
+        OracleDenoiser(analytic), analytic.schedule, batch_buckets=None
+    )
+    t2 = solo_engine.submit(SampleRequest(batch=1, seq_len=6, nfe=8, seed=7))
+    solo = solo_engine.drain(params=None)[t2]
+    assert solo.padded_batch == 1
+    np.testing.assert_allclose(
+        np.asarray(padded.x0), np.asarray(solo.x0), atol=1e-5
+    )

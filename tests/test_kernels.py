@@ -4,12 +4,11 @@ All kernels run in interpret mode on CPU; the same call sites compile for
 TPU unchanged.
 """
 
-import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
+from _hypothesis_compat import given, settings, st
 
 from repro.core.era import AM4
 from repro.core.lagrange import lagrange_weights

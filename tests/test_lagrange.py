@@ -1,7 +1,6 @@
-import hypothesis.strategies as st
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings
+from _hypothesis_compat import given, settings, st
 
 from repro.core.lagrange import (
     ers_select,

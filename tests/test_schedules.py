@@ -1,8 +1,7 @@
-import hypothesis.strategies as st
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
+from _hypothesis_compat import given, settings, st
 
 from repro.core import cosine_schedule, linear_schedule, timesteps
 

@@ -1,6 +1,8 @@
 """Solver behaviour on the analytic diffusion (exact eps oracle) —
 convergence, budget accounting, and the paper's error-robustness claims."""
 
+import dataclasses
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -8,7 +10,6 @@ import pytest
 
 from repro.core import (
     ERAConfig,
-    SolverConfig,
     default_config,
     get_solver,
     solver_names,
@@ -67,12 +68,28 @@ def test_nfe_budget_exact(analytic, xT):
 
 
 def test_era_fused_kernel_path_matches(analytic, xT):
+    """The fused Pallas step (the default) tracks the pure-jnp path."""
+    assert ERAConfig().use_fused_update  # fused is the default
     plain = get_solver("era")(
-        analytic.eps, xT, analytic.schedule, ERAConfig(nfe=10, k=4)
+        analytic.eps, xT, analytic.schedule,
+        ERAConfig(nfe=10, k=4, use_fused_update=False),
     )
     fused = get_solver("era")(
         analytic.eps, xT, analytic.schedule,
         ERAConfig(nfe=10, k=4, use_fused_update=True),
+    )
+    np.testing.assert_allclose(
+        np.asarray(plain.x0), np.asarray(fused.x0), atol=2e-5
+    )
+
+
+def test_era_fused_per_sample_matches(analytic, xT):
+    """Per-sample ERS: vmapped fused kernel == pure-jnp per-sample path."""
+    cfg = ERAConfig(nfe=12, k=4, per_sample=True)
+    fused = get_solver("era")(analytic.eps, xT, analytic.schedule, cfg)
+    plain = get_solver("era")(
+        analytic.eps, xT, analytic.schedule,
+        dataclasses.replace(cfg, use_fused_update=False),
     )
     np.testing.assert_allclose(
         np.asarray(plain.x0), np.asarray(fused.x0), atol=2e-5
@@ -137,7 +154,6 @@ def test_trajectory_recording(analytic, xT):
 def test_per_sample_ers_isolates_batch_noise(analytic, xT, reference_x0):
     """Beyond-paper: per-sample ERS — a noisy batch-mate must not degrade
     clean samples' selection (the paper's scalar delta_eps is shared)."""
-    import jax
 
     def hetero(x, t):
         key = jax.random.fold_in(

@@ -64,11 +64,14 @@ def test_era_beats_high_order_peers_at_low_nfe(trained):
     ERA beats the other high-order solvers (implicit-Adams PECE at matched
     cost, DPM-Solver-fast) and stays within range of DDIM on a metric that
     structurally favors DDIM (the reference is a fine DDIM run —
-    EXPERIMENTS.md discusses the bias)."""
+    EXPERIMENTS.md discusses the bias).  This briefly-trained model's noise
+    error is large and iid-like (see test_high_order_regime_dependence), so
+    the error-robust order here is k=2; higher k only pays off with the
+    accurate estimates of a fully trained model."""
     ref = _ref(trained)
     err = {}
     for solver in ("ddim", "implicit_adams_pece", "dpm_solver_fast", "era"):
-        x0 = _sample(trained, solver, 10, **({"k": 3} if solver == "era" else {}))
+        x0 = _sample(trained, solver, 10, **({"k": 2} if solver == "era" else {}))
         err[solver] = float(jnp.sqrt(jnp.mean((x0 - ref) ** 2)))
     assert err["era"] < err["implicit_adams_pece"], err
     assert err["era"] < err["dpm_solver_fast"], err
