@@ -1,6 +1,6 @@
 """Serving-engine benchmark: per-request latency and throughput of the
 batched ERA sampling engine (`repro.serving.BatchedSampler`) at batch sizes
-1 / 8 / 64.
+1 / 8 / 64, optionally swept across mesh sizes.
 
 Each scenario submits `bs` single-sample requests, drains them as one fused
 batch (per-sample ERS, fused Pallas step), and reports:
@@ -10,22 +10,34 @@ batch (per-sample ERS, fused Pallas step), and reports:
 
 The first drain per bucket compiles; a warmup drain is excluded from the
 timed runs, so numbers reflect the steady compiled path.
+
+Mesh sweep (`--mesh`): reruns the scenarios on 1 vs 8 virtual host devices
+(`XLA_FLAGS=--xla_force_host_platform_device_count=8`, one child process per
+device count since the flag binds at jax init) with the engine batch-sharded
+over a ("data",) mesh — the same placement a TPU pod slice would use.
 """
 
+import argparse
+import os
+import subprocess
+import sys
 import time
 
 from benchmarks import common as C
 from repro.serving import BatchedSampler, SampleRequest
 
+MESH_SWEEP_DEVICES = (1, 8)
 
-def run() -> None:
+
+def run(mesh=None) -> None:
     dlm, params, data, cfg = C.trained_model(30 if C.SMOKE else 150)
     nfe = 6 if C.SMOKE else 10
     seq = 8
     batch_sizes = (1, 8) if C.SMOKE else (1, 8, 64)
     engine = BatchedSampler(
-        dlm, C.SCHEDULE, batch_buckets=tuple(batch_sizes)
+        dlm, C.SCHEDULE, batch_buckets=tuple(batch_sizes), mesh=mesh
     )
+    tag = f"serving/era/dp{engine.dp}" if mesh is not None else "serving/era"
 
     for bs in batch_sizes:
         def drain_once(offset: int):
@@ -50,18 +62,64 @@ def run() -> None:
                 lat = sum(results[t].latency_s for t in tickets) / bs
         thpt = bs / best_wall
         C.emit(
-            f"serving/era/bs{bs}",
+            f"{tag}/bs{bs}",
             best_wall * 1e6,
             f"lat_ms={lat * 1e3:.2f},thpt={thpt:.1f}/s",
         )
 
     # compile-cache sanity: one program per bucket regardless of traffic
     C.emit(
-        "serving/era/compiled_buckets",
+        f"{tag}/compiled_buckets",
         float(len(engine.compile_cache())),
         f"buckets={sorted(k[2] for k in engine.compile_cache())}",
     )
 
 
+def run_on_local_mesh() -> None:
+    """Child entry for the mesh sweep: engine sharded over all local devices
+    (a 1-device mesh degenerates to the plain path, same program)."""
+    import jax
+
+    from repro.launch.mesh import make_sampler_mesh
+
+    print(f"# mesh child: {jax.device_count()} device(s)", flush=True)
+    run(mesh=make_sampler_mesh())
+
+
+def run_mesh_sweep() -> None:
+    """1 vs N virtual devices, one subprocess per device count (XLA_FLAGS
+    must be set before jax initializes)."""
+    for n in MESH_SWEEP_DEVICES:
+        env = dict(os.environ)
+        flags = f"--xla_force_host_platform_device_count={n}"
+        env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "") + " " + flags).strip()
+        # the flag only multiplies CPU devices; pin the child to CPU so the
+        # sweep doesn't silently bench a 1-GPU mesh twice
+        env["JAX_PLATFORMS"] = "cpu"
+        proc = subprocess.run(
+            [sys.executable, "-m", "benchmarks.bench_serving", "--mesh-child"],
+            env=env,
+        )
+        if proc.returncode != 0:
+            raise RuntimeError(f"mesh sweep child (devices={n}) failed")
+
+
 if __name__ == "__main__":
-    run()
+    ap = argparse.ArgumentParser()
+    ap.add_argument(
+        "--mesh",
+        action="store_true",
+        help="sweep the engine over 1 vs 8 virtual host devices",
+    )
+    ap.add_argument(
+        "--mesh-child",
+        action="store_true",
+        help="(internal) run sharded over whatever devices this process has",
+    )
+    args = ap.parse_args()
+    if args.mesh:
+        run_mesh_sweep()
+    elif args.mesh_child:
+        run_on_local_mesh()
+    else:
+        run()

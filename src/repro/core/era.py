@@ -31,6 +31,12 @@ Engine notes (serving path):
   (``repro.kernels.era_update``) — one HBM round trip per operand instead of
   ~(k+5) — with automatic ``interpret=True`` fallback off-TPU and a
   pure-jnp fallback if Pallas itself is unavailable.
+* :func:`sample_scan` optionally takes explicit carry ``shardings``
+  (``parallel.sharding.sampler_shardings``): latents and Lagrange buffers
+  batch-sharded over a mesh's data axes, t grid replicated.  With
+  ``per_sample=True`` every step's ERS math is row-local, so the sharded
+  scan runs with **zero cross-device collectives inside the loop** (the only
+  batch reduction, the delta_eps diagnostic mean, happens once after it).
 """
 
 from __future__ import annotations
@@ -85,6 +91,18 @@ def _fused_ops():
     process, per backend) numerics parity probe against the pure-jnp
     reference — every ERA entry point shares this gate, so a misbehaving
     kernel degrades to the jnp combine instead of silently wrong samples.
+
+    The probe can only execute eagerly (it runs the kernel and reads the
+    error as a Python float).  If the gate's first consultation happens
+    inside an outer jit trace — a jitting caller's very first trace on a
+    fresh process — the probe is deferred rather than run-and-failed: that
+    trace takes the jnp path, the cache stays unpoisoned, and the next
+    eager consultation (e.g. ``serving.BatchedSampler``, which checks the
+    gate before building each jitted bucket) enables the kernel normally.
+    Caveat for direct jitting callers: jax never retraces a cached shape,
+    so an executable compiled during the deferral keeps the jnp path for
+    its lifetime even after ``fused_path_ok()`` turns True — consult the
+    gate eagerly before jitting (as the engine does) to avoid that.
     """
     try:
         from repro.kernels import ops as _kops
@@ -92,6 +110,8 @@ def _fused_ops():
         return None
     backend = jax.default_backend()
     if backend not in _FUSED_OK:
+        if not jax.core.trace_state_clean():
+            return None  # mid-trace: defer the probe, don't cache a verdict
         try:
             _FUSED_OK[backend] = _kops.fused_step_parity() <= _FUSED_TOL
         except Exception:
@@ -131,14 +151,27 @@ def era_combine(
     return eps_bar, eps_corr
 
 
-def alloc_buffers(x: Array, config: ERAConfig) -> tuple[Array, Array]:
+def alloc_buffers(
+    x: Array, config: ERAConfig, shardings=None
+) -> tuple[Array, Array]:
     """Fresh Lagrange eps/t buffers sized for ``config.nfe`` steps.
 
     Callers that jit :func:`sample_scan` can allocate these outside the
     compiled function and donate them (``donate_argnums``) — the scan then
     updates them in place for the whole sampling run.
+
+    With ``shardings`` (see :func:`sample_scan`), the eps buffer — the
+    largest array in a sampling run — is created batch-sharded in place
+    rather than materialized on one device and redistributed.
     """
-    return buffer_init(x, config.nfe + 1, config.solver_dtype)
+    if shardings is None:
+        return buffer_init(x, config.nfe + 1, config.solver_dtype)
+    cap = config.nfe + 1
+    eps_buf = jnp.zeros(
+        (cap,) + x.shape, config.solver_dtype, device=shardings.eps_buf
+    )
+    t_buf = jnp.zeros((cap,), jnp.float32, device=shardings.t_buf)
+    return eps_buf, t_buf
 
 
 def sample(
@@ -159,6 +192,9 @@ def sample_scan(
     t_buf: Array,        # (nfe+1,) zeros, donatable
     schedule: NoiseSchedule,
     config: ERAConfig,
+    shardings=None,      # optional carry placement, duck-typed with fields
+                         # .x/.eps_buf/.t_buf/.delta_eps (NamedShardings) —
+                         # see parallel.sharding.sampler_shardings
 ) -> SolverOutput:
     n = config.nfe
     k = config.k
@@ -176,6 +212,10 @@ def sample_scan(
     am4 = jnp.asarray(AM4, jnp.float32)
 
     x = x_init.astype(dt)
+    if shardings is not None:
+        x = jax.lax.with_sharding_constraint(x, shardings.x)
+        eps_buf = jax.lax.with_sharding_constraint(eps_buf, shardings.eps_buf)
+        t_buf = jax.lax.with_sharding_constraint(t_buf, shardings.t_buf)
     # Alg. 1 line 2/3: delta_eps initialized to lambda (power = 1, uniform
     # selection); initial observation appended at index 0.
     e0 = eps_fn(x, ts[0]).astype(dt)
@@ -185,6 +225,10 @@ def sample_scan(
         if config.per_sample
         else jnp.float32(config.lam)
     )
+    if shardings is not None:
+        delta_eps = jax.lax.with_sharding_constraint(
+            delta_eps, shardings.delta_eps
+        )
 
     def warm_branch(ops):
         x, eps_buf, t_buf, de, i, t_cur, t_next = ops
@@ -272,12 +316,19 @@ def sample_scan(
         de = jnp.where(i >= k - 1, de_new, de)
         eps_buf, t_buf = buffer_append(eps_buf, t_buf, i + 1, e_new, t_next)
         traj_x = x_next if config.return_trajectory else None
-        return (x_next, eps_buf, t_buf, de), (jnp.mean(de), traj_x)
+        # per-sample: emit the raw (B,) errors and reduce after the scan, so
+        # a batch-sharded run keeps the loop body free of collectives
+        return (x_next, eps_buf, t_buf, de), (de, traj_x)
 
     (x, eps_buf, t_buf, delta_eps), (de_hist, traj_tail) = jax.lax.scan(
         step, (x, eps_buf, t_buf, delta_eps), step_grid(ts)
     )
-    aux: dict[str, Any] = {"delta_eps_history": de_hist}
+    aux: dict[str, Any] = {}
+    if config.per_sample:
+        aux["delta_eps_history_per_sample"] = de_hist        # (nfe, B)
+        aux["delta_eps_history"] = jnp.mean(de_hist, axis=-1)
+    else:
+        aux["delta_eps_history"] = de_hist
     if config.return_trajectory:
         aux["trajectory"] = jnp.concatenate(
             [x_init.astype(dt)[None], traj_tail], axis=0

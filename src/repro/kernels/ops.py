@@ -165,7 +165,11 @@ def fused_step_parity(
     """Max abs error of the fused `era_step` vs the reference combine + DDIM
     update on a random probe — the numerics gate for the fused default path
     (runs in interpret mode off-TPU).  Returns the error; callers decide the
-    tolerance (1e-5 is comfortable in f32)."""
+    tolerance (1e-5 is comfortable in f32).
+
+    Must run eagerly: it executes the kernel and converts the error to a
+    Python float, neither of which works under an ambient jit trace (the
+    gate in ``core.era._fused_ops`` guards that case)."""
     from repro.core.era import AM4, era_combine
 
     keys = jax.random.split(jax.random.PRNGKey(seed), 3)

@@ -24,6 +24,19 @@ def make_host_mesh(model_parallel: int = 1):
     return jax.make_mesh((dp, model_parallel), ("data", "model"))
 
 
+def make_sampler_mesh(max_devices: int | None = None):
+    """Data-only mesh for the batched sampling engine.
+
+    The sampler shards only the batch dimension (params replicate, per-
+    sample ERS stays shard-local), so a single "data" axis over the local
+    devices is the whole topology.  ``max_devices`` caps the axis for tests
+    that want a fixed dp on machines with more devices."""
+    n = jax.device_count()
+    if max_devices is not None:
+        n = min(n, max_devices)
+    return jax.make_mesh((n,), ("data",), devices=jax.devices()[:n])
+
+
 # TPU v5e hardware constants for the roofline analysis (per chip).
 PEAK_FLOPS_BF16 = 197e12        # FLOP/s
 HBM_BW = 819e9                  # B/s

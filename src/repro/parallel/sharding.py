@@ -17,7 +17,7 @@ rules shard real params, abstract params, optimizer mirrors, and caches.
 
 from __future__ import annotations
 
-from typing import Any
+from typing import Any, NamedTuple
 
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
@@ -42,6 +42,117 @@ def dp_size(mesh: Mesh) -> int:
 
 def _div(n: int, k: int) -> bool:
     return k > 0 and n % k == 0
+
+
+def round_to_dp(n: int, mesh: Mesh | None) -> int:
+    """Smallest multiple of the mesh's data-parallel size that is >= n.
+
+    The serving engine rounds batch buckets with this so every fused batch
+    splits evenly across the data axes (no ragged shards)."""
+    if mesh is None:
+        return n
+    dp = dp_size(mesh)
+    return -(-n // dp) * dp
+
+
+class SamplerSpecs(NamedTuple):
+    """PartitionSpecs for the ERA sampling scan carry.
+
+    Mirrors the carry of ``core.era.sample_scan``: the latents ``x``
+    (batch-leading), the Lagrange ``eps_buf`` ``(nfe+1, B, ...)`` — batch is
+    axis 1, like KV caches — the replicated ``t_buf`` time grid, and the ERS
+    error state ``delta_eps`` ((B,) per-sample, scalar otherwise).
+    """
+
+    x: P
+    eps_buf: P
+    t_buf: P
+    delta_eps: P
+
+
+class SamplerShardings(NamedTuple):
+    """``SamplerSpecs`` bound to a concrete mesh (NamedSharding leaves)."""
+
+    x: NamedSharding
+    eps_buf: NamedSharding
+    t_buf: NamedSharding
+    delta_eps: NamedSharding
+
+
+def sampler_pspecs(
+    mesh: Mesh,
+    *,
+    batch: int | None = None,
+    per_sample: bool = True,
+    x_ndim: int = 3,
+) -> SamplerSpecs:
+    """Scan-carry PartitionSpecs for the batched sampling engine.
+
+    Everything shards only along the batch dimension over the mesh's data
+    axes; per-sample ERS then keeps the whole solver loop collective-free
+    (each shard measures its own rows' delta_eps and selects its own
+    Lagrange bases).  If ``batch`` is given and does not divide the
+    data-parallel size, every entry degrades to replicated — correct, just
+    not parallel — so exact-size (unpadded) runs never hit a ragged-shard
+    jit error.
+    """
+    dp: Any = data_axes(mesh)
+    if not dp or (batch is not None and not _div(batch, dp_size(mesh))):
+        dp = None
+    rest = (None,) * (x_ndim - 1)
+    return SamplerSpecs(
+        x=P(dp, *rest),
+        eps_buf=P(None, dp, *rest),
+        t_buf=P(),
+        delta_eps=P(dp) if per_sample else P(),
+    )
+
+
+def sampler_shardings(
+    mesh: Mesh,
+    *,
+    batch: int | None = None,
+    per_sample: bool = True,
+    x_ndim: int = 3,
+) -> SamplerShardings:
+    """``sampler_pspecs`` materialized as NamedShardings on ``mesh`` (what
+    ``core.era.sample_scan`` takes as its ``shardings`` argument)."""
+    specs = sampler_pspecs(
+        mesh, batch=batch, per_sample=per_sample, x_ndim=x_ndim
+    )
+    return SamplerShardings(*(NamedSharding(mesh, s) for s in specs))
+
+
+class ParamReplicator:
+    """Replicate a params tree over a mesh, caching the placed copy.
+
+    The cache key is the identity of every leaf, not of the container —
+    callers that rebuild or mutate their params dict between calls (a
+    finetune-and-sample loop) get a fresh placement instead of silently
+    sampling with the first call's weights."""
+
+    def __init__(self, mesh: Mesh):
+        self.mesh = mesh
+        self._sharding = NamedSharding(mesh, P())
+        # the cached leaves are held alongside their ids: id() values are
+        # only unique among live objects, so pinning the leaves is what
+        # makes the identity key trustworthy across caller-side rebuilds
+        self._cached_leaves: list | None = None
+        self._placed: Any = None
+
+    def __call__(self, params):
+        leaves = jax.tree.leaves(params)
+        stale = (
+            self._cached_leaves is None
+            or len(leaves) != len(self._cached_leaves)
+            or any(a is not b for a, b in zip(leaves, self._cached_leaves))
+        )
+        if stale:
+            self._placed = jax.tree.map(
+                lambda a: jax.device_put(a, self._sharding), params
+            )
+            self._cached_leaves = leaves
+        return self._placed
 
 
 class ShardingRules:

@@ -1,3 +1,9 @@
+from repro.parallel.sharding import (
+    SamplerShardings,
+    SamplerSpecs,
+    sampler_pspecs,
+    sampler_shardings,
+)
 from repro.serving.diffusion_sampler import (
     BatchedSampler,
     SampleRequest,
@@ -13,8 +19,12 @@ __all__ = [
     "SampleRequest",
     "SampleResult",
     "SamplerService",
+    "SamplerShardings",
+    "SamplerSpecs",
     "ServeConfig",
     "cache_slots",
     "fused_path_ok",
     "resolve_window",
+    "sampler_pspecs",
+    "sampler_shardings",
 ]

@@ -21,6 +21,13 @@ Architecture:
   per-backend numerics parity probe (``era._fused_ops`` /
   ``kernels.ops.fused_step_parity``) and falls back to the pure-jnp combine
   if the kernel misbehaves — ``fused_path_ok()`` reports the outcome.
+* Mesh mode (``mesh=`` a ``jax.sharding.Mesh``): the engine batch-shards the
+  latents and Lagrange eps buffer over the mesh's data axes
+  (``parallel.sharding.sampler_shardings``) and replicates the denoiser
+  params, so one fused drain spreads its rows across every device.  Batch
+  buckets round up to multiples of the data-parallel size (no ragged
+  shards), and per-sample ERS keeps each row's error measurement and base
+  selection local to its shard — the solver loop runs collective-free.
 * :class:`SamplerService` — the original one-call facade, now a thin wrapper
   over the engine with exact-size buckets (no padding).
 """
@@ -33,10 +40,17 @@ from typing import Any
 
 import jax
 import jax.numpy as jnp
+from jax.sharding import Mesh
 
 from repro.core import ERAConfig, NoiseSchedule, SolverConfig, get_solver
 from repro.core import era as era_mod
 from repro.models.diffusion import DiffusionLM
+from repro.parallel.sharding import (
+    ParamReplicator,
+    dp_size,
+    round_to_dp,
+    sampler_shardings,
+)
 
 Array = jax.Array
 
@@ -61,7 +75,9 @@ class SampleResult:
     """Per-request output of a drained batch."""
 
     x0: Array                # (batch, seq_len, d_model)
-    aux: dict[str, Any]      # solver diagnostics (shared across the batch)
+    aux: dict[str, Any]      # solver diagnostics, scoped to this request's
+                             # rows (per-sample histories / trajectories
+                             # exclude batch-mates and pad rows)
     latency_s: float         # submit -> result wall time
     batch_wall_s: float      # wall time of the fused batch this rode in
     padded_batch: int        # bucket size the batch ran at
@@ -77,6 +93,7 @@ class BatchedSampler:
         solver: str = "era",
         solver_config: SolverConfig | None = None,
         batch_buckets: tuple[int, ...] | None = (1, 8, 64),
+        mesh: Mesh | None = None,
     ):
         self.dlm = dlm
         self.schedule = schedule
@@ -87,8 +104,16 @@ class BatchedSampler:
                 ERAConfig(per_sample=True) if solver == "era" else SolverConfig()
             )
         self.solver_config = solver_config
-        self.batch_buckets = tuple(sorted(batch_buckets)) if batch_buckets else None
+        self.mesh = mesh
+        self.dp = dp_size(mesh) if mesh is not None else 1
+        if batch_buckets:
+            # every fused batch must split evenly over the data axes, so
+            # buckets round up to dp multiples (1/8/64 on dp=8 -> 8/64)
+            batch_buckets = sorted({round_to_dp(b, mesh) for b in batch_buckets})
+        self.batch_buckets = tuple(batch_buckets) if batch_buckets else None
         self._jitted: dict[Any, Any] = {}
+        self._shardings_cache: dict[Any, Any] = {}
+        self._replicate = ParamReplicator(mesh) if mesh is not None else None
         self._pending: list[tuple[int, SampleRequest, float]] = []
         self._next_ticket = 0
 
@@ -157,11 +182,28 @@ class BatchedSampler:
     # ---- fused execution -----------------------------------------------
     def _bucket_batch(self, n: int) -> int:
         if not self.batch_buckets:
-            return n
+            return round_to_dp(n, self.mesh)
         for b in self.batch_buckets:
             if n <= b:
                 return b
-        return n  # oversize request: exact-size compile
+        # oversize request: exact-size compile (dp-rounded on a mesh)
+        return round_to_dp(n, self.mesh)
+
+    # ---- mesh placement ------------------------------------------------
+    def _shardings(self, batch: int):
+        """Carry shardings for a padded batch (None off-mesh)."""
+        if self.mesh is None:
+            return None
+        key = batch
+        if key not in self._shardings_cache:
+            per_sample = (
+                isinstance(self.solver_config, ERAConfig)
+                and self.solver_config.per_sample
+            )
+            self._shardings_cache[key] = sampler_shardings(
+                self.mesh, batch=batch, per_sample=per_sample
+            )
+        return self._shardings_cache[key]
 
     def _run_chunk(self, params, seq_len, nfe, chunk, results, pad=True) -> None:
         d = self.dlm.config.d_model
@@ -180,10 +222,14 @@ class BatchedSampler:
         x_init = jnp.concatenate(parts, axis=0)
 
         cfg = dataclasses.replace(self.solver_config, nfe=nfe)
+        shardings = self._shardings(padded)
+        if shardings is not None:
+            x_init = jax.device_put(x_init, shardings.x)
+            params = self._replicate(params)
         run = self._runner(cfg, padded, seq_len)
         t0 = time.perf_counter()
         if self.solver_name == "era":
-            eps_buf, t_buf = era_mod.alloc_buffers(x_init, cfg)
+            eps_buf, t_buf = era_mod.alloc_buffers(x_init, cfg, shardings)
             x0, aux = run(params, x_init, eps_buf, t_buf)
         else:
             x0, aux = run(params, x_init)
@@ -195,18 +241,48 @@ class BatchedSampler:
         for ticket, req, t_submit in chunk:
             results[ticket] = SampleResult(
                 x0=x0[off : off + req.batch],
-                aux=aux,
+                aux=self._request_aux(aux, off, req.batch),
                 latency_s=done - t_submit,
                 batch_wall_s=wall,
                 padded_batch=padded,
             )
             off += req.batch
 
+    @staticmethod
+    def _request_aux(aux, off: int, batch: int):
+        """Scope the solver diagnostics to one request's rows.
+
+        Per-sample runs carry a (nfe, padded_batch) delta_eps history, and
+        return_trajectory runs carry (nfe+1, padded_batch, ...) latents; a
+        co-batched request must see only its own rows — not its batch-mates'
+        (tenant isolation) and not the pad rows, which would also dilute the
+        delta_eps mean."""
+        per_sample = aux.get("delta_eps_history_per_sample")
+        trajectory = aux.get("trajectory")
+        if per_sample is None and trajectory is None:
+            return aux
+        scoped = dict(aux)
+        if per_sample is not None:
+            rows = per_sample[:, off : off + batch]
+            scoped["delta_eps_history_per_sample"] = rows
+            scoped["delta_eps_history"] = jnp.mean(rows, axis=-1)
+        if trajectory is not None:
+            scoped["trajectory"] = trajectory[:, off : off + batch]
+        return scoped
+
     def _runner(self, cfg: SolverConfig, batch: int, seq_len: int):
-        """One jitted program per (config, padded-batch, seq_len) bucket."""
-        key = (self.solver_name, cfg, batch, seq_len)
+        """One jitted program per (config, padded-batch, seq_len) bucket.
+
+        Mesh-aware: the key carries the data-parallel size so an engine
+        rebuilt on a different mesh never aliases a cached program."""
+        key = (self.solver_name, cfg, batch, seq_len, self.dp)
         if key not in self._jitted:
+            shardings = self._shardings(batch)
             if self.solver_name == "era":
+                # consult the parity gate here, eagerly — the probe cannot
+                # run inside the jit trace below, and this is the first ERA
+                # touch on a fresh process serving only compiled buckets
+                era_mod._fused_ops()
 
                 def run(params, x_init, eps_buf, t_buf):
                     out = era_mod.sample_scan(
@@ -216,6 +292,7 @@ class BatchedSampler:
                         t_buf,
                         self.schedule,
                         cfg,
+                        shardings=shardings,
                     )
                     return out.x0, out.aux
 
@@ -250,6 +327,7 @@ class SamplerService:
         schedule: NoiseSchedule,
         solver: str = "era",
         solver_config: SolverConfig | None = None,
+        mesh: Mesh | None = None,
     ):
         self.dlm = dlm
         self.schedule = schedule
@@ -258,7 +336,7 @@ class SamplerService:
             solver_config = ERAConfig() if solver == "era" else SolverConfig()
         self.solver_config = solver_config
         self._engine = BatchedSampler(
-            dlm, schedule, solver, solver_config, batch_buckets=None
+            dlm, schedule, solver, solver_config, batch_buckets=None, mesh=mesh
         )
 
     def sample(self, params, req: SampleRequest) -> tuple[Array, dict]:

@@ -18,10 +18,12 @@ import dataclasses
 
 import jax
 import jax.numpy as jnp
+from jax.sharding import Mesh
 
 from repro.configs.base import ModelConfig
 from repro.configs.registry import long_context_policy
 from repro.models.model import Model
+from repro.parallel.sharding import ParamReplicator, ShardingRules
 
 Array = jax.Array
 
@@ -54,12 +56,25 @@ def resolve_window(cfg: ModelConfig, serve: ServeConfig, seq_len: int) -> int:
 
 
 class Engine:
-    """Synchronous batched serving around a Model."""
+    """Synchronous batched serving around a Model.
 
-    def __init__(self, model: Model, serve: ServeConfig = ServeConfig()):
+    With ``mesh=`` set, params replicate over the mesh and each request
+    batch shards across the data axes when its size divides the
+    data-parallel size (the prefill cache inherits that placement, so
+    decode stays data-parallel for the whole generation)."""
+
+    def __init__(
+        self,
+        model: Model,
+        serve: ServeConfig = ServeConfig(),
+        mesh: Mesh | None = None,
+    ):
         self.model = model
         self.serve = serve
         self.cfg = model.config
+        self.mesh = mesh
+        self._replicate = ParamReplicator(mesh) if mesh is not None else None
+        self._rules = ShardingRules(self.cfg, mesh) if mesh is not None else None
         slots = cache_slots(self.cfg, serve)
         self._prefill = jax.jit(
             lambda p, b, w: model.prefill(p, b, slots, w),
@@ -70,6 +85,19 @@ class Engine:
             static_argnums=(3,),
             donate_argnums=(1,),
         )
+
+    # ---- mesh placement ----
+    def _place(self, params, batch: dict):
+        """Replicate params, batch-shard the request over the data axes
+        (per-leaf: a leading dim that doesn't divide dp replicates)."""
+        if self.mesh is None:
+            return params, batch
+        params = self._replicate(params)
+        batch = jax.tree.map(jnp.asarray, batch)
+        batch = jax.tree.map(
+            jax.device_put, batch, self._rules.batch_sharding(batch)
+        )
+        return params, batch
 
     # ---- steps (also used by the dry-run) ----
     def prefill_step(self, params, batch: dict, window_override: int = -1):
@@ -98,6 +126,7 @@ class Engine:
         """Prefill the prompts, then decode greedily/sampled."""
         key = jax.random.PRNGKey(0) if key is None else key
         batch = {"tokens": prompts, **(extras or {})}
+        params, batch = self._place(params, batch)
         wo = resolve_window(self.cfg, self.serve, prompts.shape[1] + max_new_tokens)
         logits, cache = self.prefill_step(params, batch, wo)
         off = self.cfg.num_meta_tokens

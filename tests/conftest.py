@@ -1,8 +1,17 @@
+import json
+import os
+import subprocess
+import sys
+import types
+
 import jax
 import jax.numpy as jnp
 import pytest
 
 from repro.core import linear_schedule
+
+MESH_DEVICES = 8
+MESH_XLA_FLAG = f"--xla_force_host_platform_device_count={MESH_DEVICES}"
 
 
 class AnalyticGaussian:
@@ -32,6 +41,61 @@ class AnalyticGaussian:
             return self.eps(x, t) + mag * jax.random.normal(key, x.shape)
 
         return fn
+
+
+class OracleDenoiser:
+    """DiffusionLM-shaped wrapper around the analytic eps oracle, so engine
+    tests are exact and fast (no network params)."""
+
+    D_MODEL = 8
+
+    def __init__(self, analytic):
+        self.analytic = analytic
+        self.config = types.SimpleNamespace(d_model=self.D_MODEL)
+
+    def eps_fn(self, params):
+        return self.analytic.eps
+
+
+@pytest.fixture(scope="session")
+def mesh8():
+    """8-virtual-CPU-device ("data",) mesh for sharded serving tests.
+
+    Env guard: only materializes when the process was launched with
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` (the CI sharded
+    job does).  Single-device runs skip these cases — the same mesh parity
+    is still covered there through the ``run_mesh_subprocess`` tests, which
+    re-run the check in a flagged child process.
+    """
+    if jax.device_count() < MESH_DEVICES:
+        pytest.skip(
+            f"needs >= {MESH_DEVICES} devices; launch pytest with "
+            f"XLA_FLAGS={MESH_XLA_FLAG}"
+        )
+    from repro.launch.mesh import make_sampler_mesh
+
+    return make_sampler_mesh(MESH_DEVICES)
+
+
+def run_mesh_subprocess(script: str, timeout: int = 600) -> dict:
+    """Run a tests/ script under the 8-virtual-device XLA flag; parse the
+    JSON record it prints on its last stdout line."""
+    tests_dir = os.path.dirname(os.path.abspath(__file__))
+    root = os.path.dirname(tests_dir)
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "") + " " + MESH_XLA_FLAG).strip()
+    # the virtual-device flag only multiplies CPU-platform devices; pin the
+    # child to CPU so a GPU/TPU jax install still gets an 8-device mesh
+    env["JAX_PLATFORMS"] = "cpu"
+    env["PYTHONPATH"] = os.path.join(root, "src") + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else ""
+    )
+    proc = subprocess.run(
+        [sys.executable, os.path.join(tests_dir, script)],
+        capture_output=True, text=True, timeout=timeout, cwd=root, env=env,
+    )
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    return json.loads(proc.stdout.strip().splitlines()[-1])
 
 
 @pytest.fixture(scope="session")

@@ -1,30 +1,21 @@
-"""Batched sampling engine: fused-step parity, compile-once-per-bucket, and
-batch-of-N == N-independent-runs equivalence (per-sample ERS on)."""
+"""Batched sampling engine: fused-step parity (+ broken-kernel fallback),
+compile-once-per-bucket, batch-of-N == N-independent-runs equivalence
+(per-sample ERS on), padding invariance, and mesh-sharded drain parity."""
 
-import types
+import dataclasses
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from conftest import OracleDenoiser, run_mesh_subprocess
 from repro.core import ERAConfig, get_solver
+from repro.core import era as era_mod
 from repro.kernels import ops
 from repro.serving import BatchedSampler, SampleRequest, fused_path_ok
 
-D_MODEL = 8
-
-
-class OracleDenoiser:
-    """DiffusionLM-shaped wrapper around the analytic eps oracle, so engine
-    tests are exact and fast (no network params)."""
-
-    def __init__(self, analytic):
-        self.analytic = analytic
-        self.config = types.SimpleNamespace(d_model=D_MODEL)
-
-    def eps_fn(self, params):
-        return self.analytic.eps
+D_MODEL = OracleDenoiser.D_MODEL
 
 
 @pytest.fixture()
@@ -50,6 +41,77 @@ def test_fused_path_ok_gate():
     assert fused_path_ok()
 
 
+def test_parity_gate_active_in_float32():
+    """The gate is actually on for this backend: the f32 parity probe is
+    within tolerance and core resolves the fused ops module (not the jnp
+    fallback)."""
+    assert ops.fused_step_parity() <= era_mod._FUSED_TOL
+    backend = jax.default_backend()
+    assert era_mod._fused_ops() is not None
+    assert era_mod._FUSED_OK[backend] is True
+
+
+def test_gate_first_consulted_inside_jit_trace_is_not_poisoned(monkeypatch):
+    """The probe cannot execute under an ambient jit trace; a fresh process
+    whose first gate consultation happens mid-trace must defer (jnp path
+    for that trace) WITHOUT caching a failure, so the next eager check
+    still enables the kernel.  Regression: this used to cache False and
+    silently disable the fused path process-wide."""
+    monkeypatch.setattr(era_mod, "_FUSED_OK", {})  # fresh-process cache
+
+    @jax.jit
+    def traced(z):
+        assert era_mod._fused_ops() is None  # deferred, not probed
+        return z
+
+    traced(jnp.zeros(()))
+    assert jax.default_backend() not in era_mod._FUSED_OK  # unpoisoned
+    assert fused_path_ok()  # eager probe now enables the kernel
+
+
+def test_engine_enables_fused_path_from_fresh_process(monkeypatch, analytic):
+    """The engine's jitted-bucket path probes the gate eagerly before
+    tracing, so a process that only ever serves compiled drains still gets
+    the fused kernel."""
+    monkeypatch.setattr(era_mod, "_FUSED_OK", {})
+    eng = BatchedSampler(
+        OracleDenoiser(analytic), analytic.schedule, batch_buckets=(2,)
+    )
+    eng.submit(SampleRequest(batch=1, seq_len=6, nfe=6, seed=0))
+    eng.drain(params=None)
+    assert era_mod._FUSED_OK[jax.default_backend()] is True
+
+
+def test_broken_kernel_silently_falls_back_to_jnp(monkeypatch, analytic):
+    """A kernel that fails the parity probe must degrade to the pure-jnp
+    combine — same samples as use_fused_update=False, never garbage — and
+    report fused_path_ok() is False."""
+
+    def broken_era_step(x, eps_sel, t_sel, e_hist, t_next, cx, ce, am4, **kw):
+        return x + 1e3, eps_sel[0] + 1e3
+
+    monkeypatch.setattr(ops, "era_step", broken_era_step)
+    monkeypatch.setattr(era_mod, "_FUSED_OK", {})  # force a fresh probe
+    assert fused_path_ok() is False
+
+    cfg = ERAConfig(nfe=8, per_sample=True)
+    x = jax.random.normal(jax.random.PRNGKey(2), (2, 6, D_MODEL), jnp.float32)
+    out = get_solver("era")(analytic.eps, x, analytic.schedule, cfg)
+    assert not bool(jnp.any(jnp.isnan(out.x0)))
+    ref = get_solver("era")(
+        analytic.eps,
+        x,
+        analytic.schedule,
+        dataclasses.replace(cfg, use_fused_update=False),
+    )
+    np.testing.assert_array_equal(np.asarray(out.x0), np.asarray(ref.x0))
+
+
+def test_gate_recovers_after_restore(analytic):
+    """The monkeypatched probe above must not poison the session cache."""
+    assert fused_path_ok()
+
+
 # ---------------------------------------------------------------------------
 # batched engine semantics
 # ---------------------------------------------------------------------------
@@ -71,6 +133,13 @@ def test_submit_drain_shapes_and_metadata(engine, analytic):
     for res in results.values():
         assert not bool(jnp.any(jnp.isnan(res.x0)))
         assert "delta_eps_history" in res.aux
+        # diagnostics are scoped to the request's own rows, not the padded
+        # batch (no batch-mate rows, no pad rows in the mean)
+        assert res.aux["delta_eps_history_per_sample"].shape == (
+            8,
+            res.x0.shape[0],
+        )
+        assert res.aux["delta_eps_history"].shape == (8,)
 
 
 def test_batch_of_n_equals_independent_runs(engine, analytic):
@@ -163,3 +232,65 @@ def test_padding_rows_do_not_leak(engine, analytic):
     np.testing.assert_allclose(
         np.asarray(padded.x0), np.asarray(solo.x0), atol=1e-5
     )
+
+
+@pytest.mark.parametrize("bucket", [8, 64])
+def test_padding_invariance_at_serving_buckets(bucket, analytic):
+    """drain() results are identical whether a request's group was padded up
+    to the serving bucket (8 or 64) or run exact-size — the pad rows are
+    inert for every real row."""
+    padded_eng = BatchedSampler(
+        OracleDenoiser(analytic), analytic.schedule, batch_buckets=(bucket,)
+    )
+    exact_eng = BatchedSampler(
+        OracleDenoiser(analytic), analytic.schedule, batch_buckets=None
+    )
+    reqs = [(2, 21), (3, 22)]  # 5 rows -> 3 or 61 pad rows
+    tp = [
+        padded_eng.submit(SampleRequest(batch=b, seq_len=6, nfe=6, seed=s))
+        for b, s in reqs
+    ]
+    te = [
+        exact_eng.submit(SampleRequest(batch=b, seq_len=6, nfe=6, seed=s))
+        for b, s in reqs
+    ]
+    res_p = padded_eng.drain(params=None)
+    res_e = exact_eng.drain(params=None)
+    for (b, _), tick_p, tick_e in zip(reqs, tp, te):
+        assert res_p[tick_p].padded_batch == bucket
+        assert res_e[tick_e].padded_batch == 5  # the fused exact group
+        assert res_p[tick_p].x0.shape == (b, 6, D_MODEL)
+        np.testing.assert_allclose(
+            np.asarray(res_p[tick_p].x0),
+            np.asarray(res_e[tick_e].x0),
+            atol=1e-6,
+        )
+
+
+# ---------------------------------------------------------------------------
+# mesh-sharded drain (tentpole acceptance: parity with the single-device
+# engine on 8 virtual CPU devices)
+# ---------------------------------------------------------------------------
+
+
+def test_mesh_drain_parity_with_single_device_engine():
+    """8-device mesh drain == single-device drain within 1e-5, with batch
+    buckets rounded to dp multiples and rows spread over all devices.
+
+    Runs in-process when launched under
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 (the CI sharded
+    job); otherwise re-runs itself in a flagged subprocess, so the parity
+    wall holds in default single-device collection too."""
+    if jax.device_count() >= 8:
+        import _mesh_parity_main
+
+        rec = _mesh_parity_main.run_parity()
+    else:
+        rec = run_mesh_subprocess("_mesh_parity_main.py")
+    assert rec["devices"] >= 8  # make_sampler_mesh(8) caps bigger hosts
+    assert rec["dp"] == 8
+    assert rec["buckets"] == [8, 64]      # 1/8/64 dp-rounded
+    assert rec["padded_batch"] == 8       # 6 mixed rows pad to the 8-bucket
+    assert rec["padded_batch"] % rec["dp"] == 0
+    assert rec["x0_devices"] == 8         # batch really spread over the mesh
+    assert rec["max_diff"] <= 1e-5

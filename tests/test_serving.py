@@ -72,6 +72,22 @@ def test_cache_slots_policy():
     assert resolve_window(cfg, ServeConfig(), 4096) == -1
 
 
+def test_engine_generate_on_mesh_matches_single_device(mesh8):
+    """Data-parallel generate (params replicated, batch sharded) is token-
+    identical to the single-device engine; a non-divisible batch silently
+    degrades to replicated."""
+    cfg = get_config("llama3.2-1b", smoke=True)
+    m = build_model(cfg)
+    params = m.init(KEY)
+    prompts = jax.random.randint(KEY, (8, 10), 0, cfg.vocab_size)
+    single = Engine(m, ServeConfig(max_len=64)).generate(params, prompts, 4)
+    meshed = Engine(m, ServeConfig(max_len=64), mesh=mesh8)
+    toks = meshed.generate(params, prompts, 4)
+    np.testing.assert_array_equal(np.asarray(single), np.asarray(toks))
+    toks3 = meshed.generate(params, prompts[:3], 4)
+    np.testing.assert_array_equal(np.asarray(single)[:3], np.asarray(toks3))
+
+
 def test_sampler_service_solver_choice():
     cfg = get_config("qwen2-1.5b", smoke=True)
     dlm = DiffusionLM(build_model(cfg))

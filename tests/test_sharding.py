@@ -1,5 +1,6 @@
-"""Sharding-rule correctness (pure pspec logic — no devices needed) and the
-dry-run plumbing (subprocess with placeholder devices, marked slow)."""
+"""Sharding-rule correctness (pure pspec logic — no devices needed), the
+sampling-engine carry specs, mesh-sharded drain placement (8-virtual-device
+fixture), and the dry-run plumbing (subprocess, marked slow)."""
 
 import json
 import os
@@ -10,10 +11,17 @@ import jax
 import pytest
 from jax.sharding import PartitionSpec as P
 
+from conftest import OracleDenoiser
 from repro.configs import INPUT_SHAPES, arch_names, get_config
 from repro.launch.specs import build_program, train_microbatches
 from repro.models import build_model
-from repro.parallel.sharding import ShardingRules
+from repro.parallel.sharding import (
+    ParamReplicator,
+    ShardingRules,
+    round_to_dp,
+    sampler_pspecs,
+    sampler_shardings,
+)
 
 
 class FakeMesh:
@@ -101,6 +109,102 @@ def test_fsdp_excludes_embeddings():
     flat = dict(_leaves_with_paths(specs))
     assert "data" not in str(flat["embed"])
     assert "data" in str(flat["segs/0_dense/mlp/wi/w"])
+
+
+# ---------------------------------------------------------------------------
+# sampling-engine carry specs (pure pspec logic)
+# ---------------------------------------------------------------------------
+
+
+def test_sampler_pspecs_batch_sharded_carry():
+    """Latents/eps buffer shard the batch dim over the data axes; the time
+    grid replicates; per-sample delta_eps follows the batch."""
+    specs = sampler_pspecs(FakeMesh({"data": 8}), batch=16, per_sample=True)
+    assert specs.x == P(("data",), None, None)
+    assert specs.eps_buf == P(None, ("data",), None, None)
+    assert specs.t_buf == P()
+    assert specs.delta_eps == P(("data",))
+
+
+def test_sampler_pspecs_multi_pod_and_shared_delta():
+    mesh = FakeMesh({"pod": 2, "data": 8, "model": 2})
+    specs = sampler_pspecs(mesh, batch=16, per_sample=False)
+    assert specs.x == P(("pod", "data"), None, None)
+    assert specs.delta_eps == P()  # shared scalar delta replicates
+
+
+def test_sampler_pspecs_non_divisible_batch_replicates():
+    """An exact-size (unpadded) batch that doesn't divide dp must degrade to
+    replicated specs, never a ragged-shard error."""
+    specs = sampler_pspecs(FakeMesh({"data": 8}), batch=3, per_sample=True)
+    assert specs.x == P(None, None, None)
+    assert specs.eps_buf == P(None, None, None, None)
+    assert specs.delta_eps == P(None)
+
+
+def test_round_to_dp():
+    mesh = FakeMesh({"data": 8})
+    assert round_to_dp(1, mesh) == 8
+    assert round_to_dp(8, mesh) == 8
+    assert round_to_dp(9, mesh) == 16
+    assert round_to_dp(5, None) == 5
+
+
+def test_param_replicator_invalidates_on_leaf_change():
+    """The placement cache keys on leaf identity, so mutating the params
+    container in place (finetune-and-sample loop) gets fresh weights instead
+    of the first call's stale copy.  Works on any device count (a 1-device
+    mesh replicates trivially)."""
+    import jax.numpy as jnp
+
+    from repro.launch.mesh import make_sampler_mesh
+
+    rep = ParamReplicator(make_sampler_mesh(1))
+    params = {"w": jnp.ones((4,)), "b": jnp.zeros((2,))}
+    first = rep(params)
+    assert rep(params) is first                   # same leaves -> cached
+    params["w"] = jnp.full((4,), 2.0)             # in-place container mutation
+    second = rep(params)
+    assert second is not first
+    assert float(second["w"][0]) == 2.0
+
+
+# ---------------------------------------------------------------------------
+# mesh-sharded drain placement (8-virtual-device fixture; the CI sharded job
+# runs these in-process, single-device runs cover parity via the subprocess
+# test in test_batched_sampler.py)
+# ---------------------------------------------------------------------------
+
+
+def test_sampler_shardings_on_real_mesh(mesh8):
+    sh = sampler_shardings(mesh8, batch=8, per_sample=True)
+    assert sh.x.spec == P(("data",), None, None)
+    assert len(sh.x.mesh.devices.ravel()) == 8
+
+
+def test_mesh_drain_places_rows_across_devices(mesh8, analytic):
+    from repro.serving import BatchedSampler, SampleRequest
+
+    eng = BatchedSampler(
+        OracleDenoiser(analytic), analytic.schedule, mesh=mesh8
+    )
+    assert eng.dp == 8
+    t = eng.submit(SampleRequest(batch=8, seq_len=6, nfe=6, seed=0))
+    res = eng.drain(params=None)[t]
+    assert res.padded_batch == 8
+    # one row per device: the drain really ran data-parallel
+    assert len(res.x0.sharding.device_set) == 8
+    solo = BatchedSampler(
+        OracleDenoiser(analytic), analytic.schedule, batch_buckets=None
+    )
+    t2 = solo.submit(SampleRequest(batch=8, seq_len=6, nfe=6, seed=0))
+    import numpy as np
+
+    np.testing.assert_allclose(
+        np.asarray(res.x0),
+        np.asarray(solo.drain(params=None)[t2].x0),
+        atol=1e-5,
+    )
 
 
 def test_microbatch_heuristic():
