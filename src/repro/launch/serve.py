@@ -4,6 +4,14 @@
         --mode ar --batch 4 --prompt-len 16 --gen 32
     PYTHONPATH=src python -m repro.launch.serve --arch qwen2-1.5b --smoke \
         --mode diffusion --solver era --nfe 10
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen2-1.5b --smoke \
+        --mode diffusion --continuous --requests 16 --rate 20
+
+``--continuous`` drives the continuous-batching scheduler with a simulated
+open-loop client: ``--requests`` single-sample requests arrive with Poisson
+gaps at ``--rate`` req/s (open-loop — arrivals never wait for service), and
+the run reports p50/p99 arrival-to-result latency, throughput, and how full
+the fused batches ran.
 """
 
 from __future__ import annotations
@@ -20,7 +28,69 @@ from repro.core import ERAConfig, SolverConfig, linear_schedule, solver_names
 from repro.data import frontend_features
 from repro.models import build_model
 from repro.models.diffusion import DiffusionLM
-from repro.serving import Engine, SampleRequest, SamplerService, ServeConfig
+from repro.serving import (
+    AsyncBatchedSampler,
+    BatchedSampler,
+    Engine,
+    SampleRequest,
+    SamplerService,
+    SchedulerPolicy,
+    ServeConfig,
+    open_loop,
+)
+
+
+def run_continuous(dlm, params, args) -> None:
+    """Open-loop Poisson client against the continuous-batching scheduler."""
+    sc = (
+        ERAConfig(nfe=args.nfe, k=args.k, lam=args.lam, per_sample=True)
+        if args.solver == "era"
+        else SolverConfig(nfe=args.nfe)
+    )
+    engine = BatchedSampler(
+        dlm, linear_schedule(), args.solver, sc, batch_buckets=(1, 8, 64)
+    )
+    # compile every bucket program before the timed stream
+    for bucket in engine.batch_buckets:
+        for i in range(bucket):
+            engine.submit(
+                SampleRequest(
+                    batch=1, seq_len=args.seq, nfe=args.nfe, seed=10_000 + i
+                )
+            )
+        engine.drain(params)
+
+    policy = SchedulerPolicy(
+        max_wait_ms=args.max_wait_ms, target_occupancy=args.occupancy
+    )
+    rng = np.random.default_rng(args.seed)
+    gaps = rng.exponential(1.0 / args.rate, args.requests)
+    futures = []
+    with AsyncBatchedSampler(engine, params, policy) as sched:
+        t_start = open_loop(
+            gaps,
+            lambda i: futures.append(
+                sched.submit(
+                    SampleRequest(
+                        batch=1, seq_len=args.seq, nfe=args.nfe,
+                        seed=args.seed + i,
+                    )
+                )
+            ),
+        )
+        results = [f.result() for f in futures]
+        makespan = time.perf_counter() - t_start
+        stats = sched.stats()
+    lats_ms = np.array([r.latency_s for r in results]) * 1e3
+    print(
+        f"continuous: {args.requests} req @ {args.rate:.1f}/s "
+        f"(max_wait={policy.max_wait_ms}ms occ={policy.target_occupancy}) | "
+        f"p50={np.percentile(lats_ms, 50):.1f}ms "
+        f"p99={np.percentile(lats_ms, 99):.1f}ms "
+        f"thpt={args.requests / makespan:.1f}/s "
+        f"batches={stats['batches']} "
+        f"mean_rows={stats['mean_batch_rows']:.1f}"
+    )
 
 
 def main() -> None:
@@ -39,7 +109,23 @@ def main() -> None:
     ap.add_argument("--lam", type=float, default=5.0)
     ap.add_argument("--seq", type=int, default=32, help="diffusion seq len")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument(
+        "--continuous",
+        action="store_true",
+        help="serve a simulated open-loop Poisson stream through the "
+        "continuous-batching scheduler (diffusion mode only)",
+    )
+    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--rate", type=float, default=20.0, help="arrivals/s")
+    ap.add_argument("--max-wait-ms", type=float, default=25.0)
+    ap.add_argument(
+        "--occupancy", type=float, default=1.0,
+        help="launch a batch early once this fraction of the largest "
+        "bucket is pending",
+    )
     args = ap.parse_args()
+    if args.continuous and args.mode != "diffusion":
+        ap.error("--continuous requires --mode diffusion")
 
     cfg = get_config(args.arch, smoke=args.smoke)
     model = build_model(cfg)
@@ -48,6 +134,9 @@ def main() -> None:
     if args.mode == "diffusion":
         dlm = DiffusionLM(model)
         params = dlm.init(key)
+        if args.continuous:
+            run_continuous(dlm, params, args)
+            return
         sc = (
             ERAConfig(nfe=args.nfe, k=args.k, lam=args.lam)
             if args.solver == "era"

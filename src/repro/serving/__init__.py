@@ -6,24 +6,28 @@ from repro.parallel.sharding import (
 )
 from repro.serving.diffusion_sampler import (
     BatchedSampler,
-    SampleRequest,
-    SampleResult,
     SamplerService,
     fused_path_ok,
 )
 from repro.serving.engine import Engine, ServeConfig, cache_slots, resolve_window
+from repro.serving.executor import FusedExecutor, SampleRequest, SampleResult
+from repro.serving.scheduler import AsyncBatchedSampler, SchedulerPolicy, open_loop
 
 __all__ = [
+    "AsyncBatchedSampler",
     "BatchedSampler",
     "Engine",
+    "FusedExecutor",
     "SampleRequest",
     "SampleResult",
     "SamplerService",
     "SamplerShardings",
     "SamplerSpecs",
+    "SchedulerPolicy",
     "ServeConfig",
     "cache_slots",
     "fused_path_ok",
+    "open_loop",
     "resolve_window",
     "sampler_pspecs",
     "sampler_shardings",

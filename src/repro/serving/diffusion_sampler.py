@@ -4,19 +4,28 @@ request-batching engine.
 
 Architecture:
 
-* :class:`BatchedSampler` — the engine.  ``submit()`` enqueues requests;
-  ``drain()`` groups them by (seq_len, nfe), pads each group's batch up to a
-  shape bucket, and runs the whole solver loop as ONE jitted XLA program per
-  bucket (``jax.lax.scan`` over NFE steps inside; eps/t Lagrange buffers
-  donated on accelerator backends).  The jit cache is keyed by bucket, so a
-  steady request stream compiles exactly once per (sample-shape, nfe, k)
-  bucket no matter how request batch sizes fluctuate.
+* :class:`~repro.serving.executor.FusedExecutor` — the thread-safe
+  execution core: one jitted XLA program per (sample-shape, nfe, k) bucket
+  (``jax.lax.scan`` over NFE steps inside; eps/t Lagrange buffers donated on
+  accelerator backends), mesh placement, chunk packing, and per-request aux
+  scoping.  The jit cache is keyed by bucket, so a steady request stream
+  compiles exactly once per bucket no matter how batch sizes fluctuate.
+* :class:`BatchedSampler` — the sync engine.  ``submit()`` enqueues requests
+  (from any thread) and returns a ticket whose :class:`~concurrent.futures.
+  Future` resolves at drain time; ``drain()`` groups pending requests by
+  (seq_len, nfe), pads each group's batch up to a shape bucket, and runs
+  each chunk through the shared executor.
+* :class:`~repro.serving.scheduler.AsyncBatchedSampler` — the
+  continuous-batching front end over the same executor: a background drain
+  thread batches requests across arrival time under a
+  :class:`~repro.serving.scheduler.SchedulerPolicy`.
 * Per-request isolation inside a fused batch comes from per-sample ERS
   (``ERAConfig.per_sample=True``, the engine default for ERA): every sample
   row measures its own delta_eps and selects its own Lagrange bases, so a
   batch-of-N run is equivalent to N independent runs.  Configs with the
   paper's shared scalar delta_eps couple the batch, so the engine serves
-  them one exact-size request at a time instead of fusing.
+  them one exact-size request at a time instead of fusing (and, on a mesh,
+  only at dp-multiple batches — exact-size runs cannot round up).
 * The fused Pallas step is the default path; core gates it with a one-time
   per-backend numerics parity probe (``era._fused_ops`` /
   ``kernels.ops.fused_step_parity``) and falls back to the pure-jnp combine
@@ -28,28 +37,28 @@ Architecture:
   buckets round up to multiples of the data-parallel size (no ragged
   shards), and per-sample ERS keeps each row's error measurement and base
   selection local to its shard — the solver loop runs collective-free.
-* :class:`SamplerService` — the original one-call facade, now a thin wrapper
-  over the engine with exact-size buckets (no padding).
+* :class:`SamplerService` — the original one-call facade, now a thin
+  future-consuming client over the engine with exact-size buckets.
 """
 
 from __future__ import annotations
 
-import dataclasses
+import threading
 import time
-from typing import Any
+from concurrent.futures import Future
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import Mesh
 
 from repro.core import ERAConfig, NoiseSchedule, SolverConfig, get_solver
 from repro.core import era as era_mod
 from repro.models.diffusion import DiffusionLM
-from repro.parallel.sharding import (
-    ParamReplicator,
-    dp_size,
-    round_to_dp,
-    sampler_shardings,
+from repro.serving.executor import (
+    FusedExecutor,
+    QueueItem,
+    SampleRequest,
+    SampleResult,
+    resolve_future,
 )
 
 Array = jax.Array
@@ -59,28 +68,6 @@ def fused_path_ok() -> bool:
     itself lives in core — `era._fused_ops` — so every ERA entry point is
     covered; this is the serving-side introspection hook.)"""
     return era_mod._fused_ops() is not None
-
-
-@dataclasses.dataclass(frozen=True)
-class SampleRequest:
-    batch: int
-    seq_len: int
-    nfe: int = 10
-    solver: str = "era"
-    seed: int = 0
-
-
-@dataclasses.dataclass
-class SampleResult:
-    """Per-request output of a drained batch."""
-
-    x0: Array                # (batch, seq_len, d_model)
-    aux: dict[str, Any]      # solver diagnostics, scoped to this request's
-                             # rows (per-sample histories / trajectories
-                             # exclude batch-mates and pad rows)
-    latency_s: float         # submit -> result wall time
-    batch_wall_s: float      # wall time of the fused batch this rode in
-    padded_batch: int        # bucket size the batch ran at
 
 
 class BatchedSampler:
@@ -95,227 +82,134 @@ class BatchedSampler:
         batch_buckets: tuple[int, ...] | None = (1, 8, 64),
         mesh: Mesh | None = None,
     ):
-        self.dlm = dlm
-        self.schedule = schedule
-        self.solver_name = solver
-        if solver_config is None:
-            # per-sample ERS isolates co-batched requests from each other
-            solver_config = (
-                ERAConfig(per_sample=True) if solver == "era" else SolverConfig()
-            )
-        self.solver_config = solver_config
-        self.mesh = mesh
-        self.dp = dp_size(mesh) if mesh is not None else 1
-        if batch_buckets:
-            # every fused batch must split evenly over the data axes, so
-            # buckets round up to dp multiples (1/8/64 on dp=8 -> 8/64)
-            batch_buckets = sorted({round_to_dp(b, mesh) for b in batch_buckets})
-        self.batch_buckets = tuple(batch_buckets) if batch_buckets else None
-        self._jitted: dict[Any, Any] = {}
-        self._shardings_cache: dict[Any, Any] = {}
-        self._replicate = ParamReplicator(mesh) if mesh is not None else None
-        self._pending: list[tuple[int, SampleRequest, float]] = []
+        self.executor = FusedExecutor(
+            dlm, schedule, solver, solver_config, batch_buckets, mesh
+        )
+        self._queue_lock = threading.Lock()
+        self._pending: list[QueueItem] = []
+        self._futures: dict[int, Future] = {}
         self._next_ticket = 0
+
+    # engine surface mirrored from the executor (tests/benchmarks read these)
+    @property
+    def dlm(self) -> DiffusionLM:
+        return self.executor.dlm
+
+    @property
+    def schedule(self) -> NoiseSchedule:
+        return self.executor.schedule
+
+    @property
+    def solver_name(self) -> str:
+        return self.executor.solver_name
+
+    @property
+    def solver_config(self) -> SolverConfig:
+        return self.executor.solver_config
+
+    @property
+    def mesh(self) -> Mesh | None:
+        return self.executor.mesh
+
+    @property
+    def dp(self) -> int:
+        return self.executor.dp
+
+    @property
+    def batch_buckets(self) -> tuple[int, ...] | None:
+        return self.executor.batch_buckets
 
     # ---- request queue -------------------------------------------------
     def submit(self, req: SampleRequest) -> int:
         """Enqueue a request; returns its ticket for the drain() result map.
 
-        Invalid requests are rejected here, not at drain time — a bad
-        request must not poison the queue for its co-batched neighbours.
+        Thread-safe; invalid requests are rejected here, not at drain time.
+        Callers that wait off-thread while another thread drains should use
+        :meth:`submit_with_future` instead — with concurrent drains, the
+        window between ``submit()`` and ``future()`` is wide enough for
+        delivery to pop the Future first.
         """
-        if req.batch < 1:
-            raise ValueError(f"batch must be >= 1, got {req.batch}")
-        k = getattr(self.solver_config, "k", None)
-        if k is not None and req.nfe < k:
-            raise ValueError(
-                f"ERA-Solver needs nfe >= k ({req.nfe} < {k}); "
-                "lower k in the engine's solver_config or raise nfe"
-            )
-        ticket = self._next_ticket
-        self._next_ticket += 1
-        self._pending.append((ticket, req, time.perf_counter()))
-        return ticket
+        return self.submit_with_future(req)[0]
+
+    def submit_with_future(self, req: SampleRequest) -> tuple[int, Future]:
+        """Atomically enqueue a request and hand back its delivery Future —
+        no concurrent ``drain()`` can resolve-and-pop the ticket in
+        between."""
+        self.executor.validate(req)
+        with self._queue_lock:
+            ticket = self._next_ticket
+            self._next_ticket += 1
+            self._pending.append((ticket, req, time.perf_counter()))
+            fut = self._futures[ticket] = Future()
+        return ticket, fut
+
+    def future(self, ticket: int) -> Future:
+        """The Future that ``drain()`` resolves for this ticket.
+
+        Grab it between ``submit()`` and the drain: delivery pops the
+        Future (the engine does not pin results), so asking for an
+        already-delivered ticket is an error, not a silent re-wait.
+        """
+        with self._queue_lock:
+            if ticket not in self._futures:
+                raise KeyError(
+                    f"ticket {ticket} has no outstanding future — its result "
+                    "was already delivered by drain(); call future() before "
+                    "the drain that serves the ticket"
+                )
+            return self._futures[ticket]
 
     @property
     def pending(self) -> int:
-        return len(self._pending)
+        with self._queue_lock:
+            return len(self._pending)
 
     def drain(self, params) -> dict[int, SampleResult]:
-        """Run all pending requests, fused per (seq_len, nfe) shape bucket."""
-        groups: dict[tuple[int, int], list[tuple[int, SampleRequest, float]]] = {}
-        for item in self._pending:
+        """Run all pending requests, fused per (seq_len, nfe) shape bucket.
+
+        Also resolves each drained ticket's Future, so a drain from one
+        thread delivers results to submitters waiting on other threads.
+        A chunk that fails fails only its own tickets: their Futures get
+        the exception (no waiter hangs), every other chunk still runs and
+        delivers, and the first failure re-raises at the end for the
+        drain() caller.
+        """
+        with self._queue_lock:
+            pending, self._pending = self._pending, []
+        groups: dict[tuple[int, int], list[QueueItem]] = {}
+        for item in pending:
             _, req, _ = item
             groups.setdefault((req.seq_len, req.nfe), []).append(item)
-        self._pending = []
 
         results: dict[int, SampleResult] = {}
-        max_bucket = self.batch_buckets[-1] if self.batch_buckets else None
-        # ERA with a shared (non-per-sample) delta_eps couples every batch
-        # row through one global error norm — fusing strangers or adding pad
-        # rows would change each request's result, so such configs are
-        # served one exact-size request at a time instead
-        fusable = (
-            not isinstance(self.solver_config, ERAConfig)
-            or self.solver_config.per_sample
-        )
+        failure: Exception | None = None
         for (seq_len, nfe), items in groups.items():
-            if not fusable:
-                for item in items:
-                    self._run_chunk(
-                        params, seq_len, nfe, [item], results, pad=False
+            for chunk, pad in self.executor.pack(items):
+                try:
+                    self.executor.run_chunk(
+                        params, seq_len, nfe, chunk, results, pad=pad
                     )
-                continue
-            chunk: list[tuple[int, SampleRequest, float]] = []
-            total = 0
-            for item in items:
-                b = item[1].batch
-                if chunk and max_bucket and total + b > max_bucket:
-                    self._run_chunk(params, seq_len, nfe, chunk, results)
-                    chunk, total = [], 0
-                chunk.append(item)
-                total += b
-            if chunk:
-                self._run_chunk(params, seq_len, nfe, chunk, results)
+                except Exception as e:  # noqa: BLE001 - delivered via futures
+                    if failure is None:
+                        failure = e
+                    with self._queue_lock:
+                        futs = [
+                            self._futures.pop(t) for t, _, _ in chunk
+                        ]
+                    for fut in futs:
+                        resolve_future(fut, exception=e)
+        with self._queue_lock:
+            futures = {t: self._futures.pop(t) for t in results}
+        for ticket, fut in futures.items():
+            resolve_future(fut, results[ticket])
+        if failure is not None:
+            raise failure
         return results
 
-    # ---- fused execution -----------------------------------------------
-    def _bucket_batch(self, n: int) -> int:
-        if not self.batch_buckets:
-            return round_to_dp(n, self.mesh)
-        for b in self.batch_buckets:
-            if n <= b:
-                return b
-        # oversize request: exact-size compile (dp-rounded on a mesh)
-        return round_to_dp(n, self.mesh)
-
-    # ---- mesh placement ------------------------------------------------
-    def _shardings(self, batch: int):
-        """Carry shardings for a padded batch (None off-mesh)."""
-        if self.mesh is None:
-            return None
-        key = batch
-        if key not in self._shardings_cache:
-            per_sample = (
-                isinstance(self.solver_config, ERAConfig)
-                and self.solver_config.per_sample
-            )
-            self._shardings_cache[key] = sampler_shardings(
-                self.mesh, batch=batch, per_sample=per_sample
-            )
-        return self._shardings_cache[key]
-
-    def _run_chunk(self, params, seq_len, nfe, chunk, results, pad=True) -> None:
-        d = self.dlm.config.d_model
-        total = sum(req.batch for _, req, _ in chunk)
-        padded = self._bucket_batch(total) if pad else total
-        parts = [
-            jax.random.normal(
-                jax.random.PRNGKey(req.seed),
-                (req.batch, seq_len, d),
-                jnp.float32,
-            )
-            for _, req, _ in chunk
-        ]
-        if padded > total:
-            parts.append(jnp.zeros((padded - total, seq_len, d), jnp.float32))
-        x_init = jnp.concatenate(parts, axis=0)
-
-        cfg = dataclasses.replace(self.solver_config, nfe=nfe)
-        shardings = self._shardings(padded)
-        if shardings is not None:
-            x_init = jax.device_put(x_init, shardings.x)
-            params = self._replicate(params)
-        run = self._runner(cfg, padded, seq_len)
-        t0 = time.perf_counter()
-        if self.solver_name == "era":
-            eps_buf, t_buf = era_mod.alloc_buffers(x_init, cfg, shardings)
-            x0, aux = run(params, x_init, eps_buf, t_buf)
-        else:
-            x0, aux = run(params, x_init)
-        x0 = jax.block_until_ready(x0)
-        wall = time.perf_counter() - t0
-
-        done = time.perf_counter()
-        off = 0
-        for ticket, req, t_submit in chunk:
-            results[ticket] = SampleResult(
-                x0=x0[off : off + req.batch],
-                aux=self._request_aux(aux, off, req.batch),
-                latency_s=done - t_submit,
-                batch_wall_s=wall,
-                padded_batch=padded,
-            )
-            off += req.batch
-
-    @staticmethod
-    def _request_aux(aux, off: int, batch: int):
-        """Scope the solver diagnostics to one request's rows.
-
-        Per-sample runs carry a (nfe, padded_batch) delta_eps history, and
-        return_trajectory runs carry (nfe+1, padded_batch, ...) latents; a
-        co-batched request must see only its own rows — not its batch-mates'
-        (tenant isolation) and not the pad rows, which would also dilute the
-        delta_eps mean."""
-        per_sample = aux.get("delta_eps_history_per_sample")
-        trajectory = aux.get("trajectory")
-        if per_sample is None and trajectory is None:
-            return aux
-        scoped = dict(aux)
-        if per_sample is not None:
-            rows = per_sample[:, off : off + batch]
-            scoped["delta_eps_history_per_sample"] = rows
-            scoped["delta_eps_history"] = jnp.mean(rows, axis=-1)
-        if trajectory is not None:
-            scoped["trajectory"] = trajectory[:, off : off + batch]
-        return scoped
-
-    def _runner(self, cfg: SolverConfig, batch: int, seq_len: int):
-        """One jitted program per (config, padded-batch, seq_len) bucket.
-
-        Mesh-aware: the key carries the data-parallel size so an engine
-        rebuilt on a different mesh never aliases a cached program."""
-        key = (self.solver_name, cfg, batch, seq_len, self.dp)
-        if key not in self._jitted:
-            shardings = self._shardings(batch)
-            if self.solver_name == "era":
-                # consult the parity gate here, eagerly — the probe cannot
-                # run inside the jit trace below, and this is the first ERA
-                # touch on a fresh process serving only compiled buckets
-                era_mod._fused_ops()
-
-                def run(params, x_init, eps_buf, t_buf):
-                    out = era_mod.sample_scan(
-                        self.dlm.eps_fn(params),
-                        x_init,
-                        eps_buf,
-                        t_buf,
-                        self.schedule,
-                        cfg,
-                        shardings=shardings,
-                    )
-                    return out.x0, out.aux
-
-                # donate x + Lagrange buffers so XLA reuses them in place
-                # (CPU ignores donation and would warn, so gate it)
-                donate = (1, 2, 3) if jax.default_backend() != "cpu" else ()
-                self._jitted[key] = jax.jit(run, donate_argnums=donate)
-            else:
-                sample_fn = get_solver(self.solver_name)
-
-                def run(params, x_init):
-                    out = sample_fn(
-                        self.dlm.eps_fn(params), x_init, self.schedule, cfg
-                    )
-                    return out.x0, out.aux
-
-                self._jitted[key] = jax.jit(run)
-        return self._jitted[key]
-
     # ---- introspection (tests / benchmarks) ----------------------------
-    def compile_cache(self) -> dict[Any, Any]:
+    def compile_cache(self):
         """Bucket-key -> jitted runner map (each compiles exactly once)."""
-        return dict(self._jitted)
+        return self.executor.compile_cache()
 
 
 class SamplerService:
@@ -341,9 +235,15 @@ class SamplerService:
 
     def sample(self, params, req: SampleRequest) -> tuple[Array, dict]:
         """Generate req.batch sequences of latents via the solver."""
-        ticket = self._engine.submit(req)
-        res = self._engine.drain(params)[ticket]
-        return res.x0, {"wall_s": res.batch_wall_s, **res.aux}
+        _, fut = self._engine.submit_with_future(req)
+        self._engine.drain(params)
+        res: SampleResult = fut.result()
+        return res.x0, {
+            "wall_s": res.batch_wall_s,
+            "latency_s": res.latency_s,
+            "padded_batch": res.padded_batch,
+            **res.aux,
+        }
 
     # ---- dry-run hook: the full solver loop as one lowerable program ----
     def sample_program(self):

@@ -1,0 +1,350 @@
+"""Thread-safe fused-execution core of the diffusion sampling engine.
+
+:class:`FusedExecutor` owns everything below the request queue: request
+validation, bucket selection, mesh placement, the jit cache (one compiled
+program per (config, padded-batch, seq_len) bucket), chunk execution, and
+per-request aux scoping.  Both entry points share one executor instance:
+
+* the sync :class:`~repro.serving.diffusion_sampler.BatchedSampler.drain`
+  path, which fuses whatever is pending at call time, and
+* the continuous-batching
+  :class:`~repro.serving.scheduler.AsyncBatchedSampler`, whose background
+  drain thread fuses requests across arrival time.
+
+All mutable state (jit cache, shardings cache, param replication cache) is
+guarded by one re-entrant lock, and chunk execution itself is serialized
+under the same lock — concurrent ``drain()`` callers and the scheduler
+thread can share an executor without double-compiling a bucket or
+interleaving donated-buffer executions.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from concurrent.futures import Future, InvalidStateError
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh
+
+from repro.core import ERAConfig, NoiseSchedule, SolverConfig, get_solver
+from repro.core import era as era_mod
+from repro.models.diffusion import DiffusionLM
+from repro.parallel.sharding import (
+    ParamReplicator,
+    dp_size,
+    round_to_dp,
+    sampler_shardings,
+)
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class SampleRequest:
+    batch: int
+    seq_len: int
+    nfe: int = 10
+    solver: str = "era"
+    seed: int = 0
+
+
+@dataclasses.dataclass
+class SampleResult:
+    """Per-request output of a drained batch."""
+
+    x0: Array                # (batch, seq_len, d_model)
+    aux: dict[str, Any]      # solver diagnostics, scoped to this request's
+                             # rows (per-sample histories / trajectories
+                             # exclude batch-mates and pad rows)
+    latency_s: float         # submit -> result wall time
+    batch_wall_s: float      # wall time of the fused batch this rode in
+    padded_batch: int        # bucket size the batch ran at
+
+
+# A queued request: (ticket, request, submit-time).  Both the sync engine's
+# pending list and the scheduler's per-shape queues carry this shape, so the
+# executor can run a chunk from either source.
+QueueItem = tuple[int, SampleRequest, float]
+
+
+def resolve_future(fut: Future, result=None, exception=None) -> None:
+    """Resolve a delivery future, tolerating client-side cancellation.
+
+    A waiter that gave up (``fut.cancel()`` after a result() timeout) leaves
+    the future in CANCELLED state; ``set_result``/``set_exception`` on it
+    raises InvalidStateError, which must not take down the drain path — the
+    other requests in the batch still have live waiters.
+    """
+    try:
+        if exception is not None:
+            fut.set_exception(exception)
+        else:
+            fut.set_result(result)
+    except InvalidStateError:
+        pass
+
+
+class FusedExecutor:
+    """Fused-chunk runner shared by the sync drain path and the scheduler."""
+
+    def __init__(
+        self,
+        dlm: DiffusionLM,
+        schedule: NoiseSchedule,
+        solver: str = "era",
+        solver_config: SolverConfig | None = None,
+        batch_buckets: tuple[int, ...] | None = (1, 8, 64),
+        mesh: Mesh | None = None,
+    ):
+        self.dlm = dlm
+        self.schedule = schedule
+        self.solver_name = solver
+        if solver_config is None:
+            # per-sample ERS isolates co-batched requests from each other
+            solver_config = (
+                ERAConfig(per_sample=True) if solver == "era" else SolverConfig()
+            )
+        self.solver_config = solver_config
+        self.mesh = mesh
+        self.dp = dp_size(mesh) if mesh is not None else 1
+        if batch_buckets:
+            # every fused batch must split evenly over the data axes, so
+            # buckets round up to dp multiples (1/8/64 on dp=8 -> 8/64)
+            batch_buckets = sorted({round_to_dp(b, mesh) for b in batch_buckets})
+        self.batch_buckets = tuple(batch_buckets) if batch_buckets else None
+        self._jitted: dict[Any, Any] = {}
+        self._shardings_cache: dict[Any, Any] = {}
+        self._replicate = ParamReplicator(mesh) if mesh is not None else None
+        self._lock = threading.RLock()
+
+    # ---- request policy --------------------------------------------------
+    @property
+    def fusable(self) -> bool:
+        """Can strangers (and pad rows) share a batch under this config?
+
+        ERA with a shared (non-per-sample) delta_eps couples every batch row
+        through one global error norm — fusing strangers or adding pad rows
+        would change each request's result — so such configs are served one
+        exact-size request at a time instead.
+        """
+        return (
+            not isinstance(self.solver_config, ERAConfig)
+            or self.solver_config.per_sample
+        )
+
+    @property
+    def max_bucket(self) -> int | None:
+        return self.batch_buckets[-1] if self.batch_buckets else None
+
+    def validate(self, req: SampleRequest) -> None:
+        """Reject an invalid request at submit time, not drain time — a bad
+        request must not poison the queue for its co-batched neighbours."""
+        if req.batch < 1:
+            raise ValueError(f"batch must be >= 1, got {req.batch}")
+        k = getattr(self.solver_config, "k", None)
+        if k is not None and req.nfe < k:
+            raise ValueError(
+                f"ERA-Solver needs nfe >= k ({req.nfe} < {k}); "
+                "lower k in the engine's solver_config or raise nfe"
+            )
+        if not self.fusable and self.dp > 1 and req.batch % self.dp:
+            # shared-delta configs run exact-size (padding would change the
+            # global error norm), so a mesh drain cannot round them up to a
+            # dp multiple — reject instead of silently degrading the whole
+            # run to replicated placement
+            raise ValueError(
+                f"shared-delta (per_sample=False) ERA requests run unpadded, "
+                f"so on a mesh their batch must be a multiple of the "
+                f"data-parallel size ({self.dp}); got batch={req.batch}. "
+                "Use a dp-multiple batch or per_sample=True."
+            )
+
+    def pack(self, items: list[QueueItem]) -> list[tuple[list[QueueItem], bool]]:
+        """Split same-(seq_len, nfe) items into executable chunks.
+
+        Fusable configs pack greedily up to the largest batch bucket;
+        non-fusable configs get one exact-size (unpadded) chunk per request.
+        Returns ``(chunk, pad)`` pairs.
+        """
+        if not self.fusable:
+            return [([item], False) for item in items]
+        chunks: list[tuple[list[QueueItem], bool]] = []
+        chunk: list[QueueItem] = []
+        total = 0
+        for item in items:
+            b = item[1].batch
+            if chunk and self.max_bucket and total + b > self.max_bucket:
+                chunks.append((chunk, True))
+                chunk, total = [], 0
+            chunk.append(item)
+            total += b
+        if chunk:
+            chunks.append((chunk, True))
+        return chunks
+
+    # ---- fused execution -----------------------------------------------
+    def bucket_batch(self, n: int) -> int:
+        if not self.batch_buckets:
+            return round_to_dp(n, self.mesh)
+        for b in self.batch_buckets:
+            if n <= b:
+                return b
+        # oversize request: exact-size compile (dp-rounded on a mesh)
+        return round_to_dp(n, self.mesh)
+
+    # ---- mesh placement ------------------------------------------------
+    def _shardings(self, batch: int):
+        """Carry shardings for a padded batch (None off-mesh)."""
+        if self.mesh is None:
+            return None
+        key = batch
+        if key not in self._shardings_cache:
+            per_sample = (
+                isinstance(self.solver_config, ERAConfig)
+                and self.solver_config.per_sample
+            )
+            self._shardings_cache[key] = sampler_shardings(
+                self.mesh, batch=batch, per_sample=per_sample
+            )
+        return self._shardings_cache[key]
+
+    def run_chunk(
+        self,
+        params,
+        seq_len: int,
+        nfe: int,
+        chunk: list[QueueItem],
+        results: dict[int, SampleResult],
+        pad: bool = True,
+    ) -> None:
+        """Run one chunk as a single fused program; fill ``results`` by
+        ticket.  Serialized under the executor lock — safe to call from the
+        scheduler thread and sync drain() callers concurrently."""
+        with self._lock:
+            self._run_chunk_locked(params, seq_len, nfe, chunk, results, pad)
+
+    def _run_chunk_locked(self, params, seq_len, nfe, chunk, results, pad):
+        d = self.dlm.config.d_model
+        total = sum(req.batch for _, req, _ in chunk)
+        padded = self.bucket_batch(total) if pad else total
+        # assemble the batch on the host: eager jnp.concatenate would XLA-
+        # compile once per chunk *composition* (request sizes + pad rows),
+        # and under continuous batching every drain can have a new
+        # composition — 40-90ms of compile against a ~10ms solver run.
+        # Per-request noise stays jax.random (seed-deterministic across
+        # batch compositions); numpy does the composition-shaped work.
+        parts = [
+            np.asarray(
+                jax.random.normal(
+                    jax.random.PRNGKey(req.seed),
+                    (req.batch, seq_len, d),
+                    jnp.float32,
+                )
+            )
+            for _, req, _ in chunk
+        ]
+        if padded > total:
+            parts.append(np.zeros((padded - total, seq_len, d), np.float32))
+        x_init = jnp.asarray(np.concatenate(parts, axis=0))
+
+        cfg = dataclasses.replace(self.solver_config, nfe=nfe)
+        shardings = self._shardings(padded)
+        if shardings is not None:
+            x_init = jax.device_put(x_init, shardings.x)
+            params = self._replicate(params)
+        run = self._runner(cfg, padded, seq_len)
+        t0 = time.perf_counter()
+        if self.solver_name == "era":
+            eps_buf, t_buf = era_mod.alloc_buffers(x_init, cfg, shardings)
+            x0, aux = run(params, x_init, eps_buf, t_buf)
+        else:
+            x0, aux = run(params, x_init)
+        x0 = jax.block_until_ready(x0)
+        wall = time.perf_counter() - t0
+
+        done = time.perf_counter()
+        off = 0
+        for ticket, req, t_submit in chunk:
+            results[ticket] = SampleResult(
+                x0=x0[off : off + req.batch],
+                aux=self._request_aux(aux, off, req.batch),
+                latency_s=done - t_submit,
+                batch_wall_s=wall,
+                padded_batch=padded,
+            )
+            off += req.batch
+
+    @staticmethod
+    def _request_aux(aux, off: int, batch: int):
+        """Scope the solver diagnostics to one request's rows.
+
+        Per-sample runs carry a (nfe, padded_batch) delta_eps history, and
+        return_trajectory runs carry (nfe+1, padded_batch, ...) latents; a
+        co-batched request must see only its own rows — not its batch-mates'
+        (tenant isolation) and not the pad rows, which would also dilute the
+        delta_eps mean."""
+        per_sample = aux.get("delta_eps_history_per_sample")
+        trajectory = aux.get("trajectory")
+        if per_sample is None and trajectory is None:
+            return aux
+        scoped = dict(aux)
+        if per_sample is not None:
+            rows = per_sample[:, off : off + batch]
+            scoped["delta_eps_history_per_sample"] = rows
+            scoped["delta_eps_history"] = jnp.mean(rows, axis=-1)
+        if trajectory is not None:
+            scoped["trajectory"] = trajectory[:, off : off + batch]
+        return scoped
+
+    def _runner(self, cfg: SolverConfig, batch: int, seq_len: int):
+        """One jitted program per (config, padded-batch, seq_len) bucket.
+
+        Mesh-aware: the key carries the data-parallel size so an engine
+        rebuilt on a different mesh never aliases a cached program."""
+        key = (self.solver_name, cfg, batch, seq_len, self.dp)
+        if key not in self._jitted:
+            shardings = self._shardings(batch)
+            if self.solver_name == "era":
+                # consult the parity gate here, eagerly — the probe cannot
+                # run inside the jit trace below, and this is the first ERA
+                # touch on a fresh process serving only compiled buckets
+                era_mod._fused_ops()
+
+                def run(params, x_init, eps_buf, t_buf):
+                    out = era_mod.sample_scan(
+                        self.dlm.eps_fn(params),
+                        x_init,
+                        eps_buf,
+                        t_buf,
+                        self.schedule,
+                        cfg,
+                        shardings=shardings,
+                    )
+                    return out.x0, out.aux
+
+                # donate x + Lagrange buffers so XLA reuses them in place
+                # (CPU ignores donation and would warn, so gate it)
+                donate = (1, 2, 3) if jax.default_backend() != "cpu" else ()
+                self._jitted[key] = jax.jit(run, donate_argnums=donate)
+            else:
+                sample_fn = get_solver(self.solver_name)
+
+                def run(params, x_init):
+                    out = sample_fn(
+                        self.dlm.eps_fn(params), x_init, self.schedule, cfg
+                    )
+                    return out.x0, out.aux
+
+                self._jitted[key] = jax.jit(run)
+        return self._jitted[key]
+
+    # ---- introspection (tests / benchmarks) ----------------------------
+    def compile_cache(self) -> dict[Any, Any]:
+        """Bucket-key -> jitted runner map (each compiles exactly once)."""
+        with self._lock:
+            return dict(self._jitted)

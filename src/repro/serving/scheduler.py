@@ -1,0 +1,314 @@
+"""Continuous-batching async scheduler for the diffusion sampling engine.
+
+The sync :class:`~repro.serving.diffusion_sampler.BatchedSampler` only fuses
+requests that happen to be pending at the same ``drain()`` call, so a steady
+open-loop request stream degenerates to batch-of-1 drains and wastes the
+fused step and mesh sharding.  :class:`AsyncBatchedSampler` fixes that with
+the standard continuous-batching shape for fixed-cost (known-NFE) solvers:
+
+* ``submit()`` is callable from any thread and returns a
+  :class:`concurrent.futures.Future` that resolves to a
+  :class:`~repro.serving.executor.SampleResult`;
+* requests land in per-(seq_len, nfe) queues (only same-shape requests can
+  fuse into one compiled bucket);
+* a background drain thread launches a queue when it reaches the policy's
+  target bucket occupancy, or when its oldest request has waited
+  ``max_wait_ms`` (deadline promotion — a lone request can never starve);
+* ready queues are served oldest-request-first, FIFO within a queue, and
+  each launch takes at most one largest-bucket's worth of rows (the rest
+  keep their original arrival times for the next launch).
+
+Execution goes through the same thread-safe
+:class:`~repro.serving.executor.FusedExecutor` as the sync path, so the
+compiled-bucket cache, mesh placement, and per-sample ERS isolation are
+shared — a request's ``x0`` is bit-identical whether it runs via sync
+``drain()``, via this scheduler under any arrival interleaving, or solo.
+
+All policy decisions read an injectable ``clock`` and are reachable via
+:meth:`AsyncBatchedSampler.drain_once`, so the scheduling logic is testable
+with a fake clock and no background thread or real sleeps.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+import threading
+import time
+from collections import deque
+from concurrent.futures import Future
+from typing import Callable
+
+from repro.serving.diffusion_sampler import BatchedSampler
+from repro.serving.executor import (
+    QueueItem,
+    SampleRequest,
+    SampleResult,
+    resolve_future,
+)
+
+
+def open_loop(gaps, emit, clock=time.perf_counter, sleep=time.sleep) -> float:
+    """Drive an open-loop client: call ``emit(i)`` at each cumulative
+    arrival offset of ``gaps``.  Sleeps only while ahead of schedule and
+    catches up by emitting back-to-back when behind — a per-arrival sleep
+    would floor the deliverable rate at the timer resolution.  When behind,
+    ``sleep(0)`` still runs so a client colocated with the drain thread
+    yields the interpreter instead of contending with it.  Returns the
+    stream start time (same ``clock``), for makespan accounting.
+    """
+    t_start = clock()
+    offset = 0.0
+    for i, gap in enumerate(gaps):
+        offset += gap
+        delay = t_start + offset - clock()
+        sleep(delay if delay > 0 else 0.0)
+        emit(i)
+    return t_start
+
+
+@dataclasses.dataclass(frozen=True)
+class SchedulerPolicy:
+    """When does a queue of compatible requests launch as one fused batch?
+
+    * ``max_wait_ms`` — upper bound on how long any request waits in the
+      queue before its shape group is force-launched (deadline promotion).
+      Lower = better p99 latency, higher = fuller batches / more throughput.
+    * ``target_occupancy`` — fraction of the engine's largest batch bucket
+      at which a queue launches immediately instead of waiting out the
+      deadline.  1.0 waits for a completely full bucket; 0.25 launches as
+      soon as a quarter-bucket of rows is pending.
+    """
+
+    max_wait_ms: float = 10.0
+    target_occupancy: float = 1.0
+
+    def target_rows(self, max_bucket: int | None) -> int | None:
+        """Row count that triggers an immediate launch (None = deadline
+        only, for engines with no batch buckets)."""
+        if max_bucket is None:
+            return None
+        return max(1, math.ceil(self.target_occupancy * max_bucket))
+
+    def deadline(self, oldest_t: float) -> float:
+        return oldest_t + self.max_wait_ms / 1e3
+
+    def should_launch(
+        self, now: float, oldest_t: float, rows: int, max_bucket: int | None
+    ) -> bool:
+        target = self.target_rows(max_bucket)
+        if target is not None and rows >= target:
+            return True
+        return now >= self.deadline(oldest_t)
+
+
+class AsyncBatchedSampler:
+    """Continuous-batching front end over a :class:`BatchedSampler`.
+
+    ``submit()`` from any thread; a background drain thread (``start()`` /
+    ``stop()``, or use as a context manager) fuses requests across arrival
+    time through the engine's shared
+    :class:`~repro.serving.executor.FusedExecutor`.
+
+    ``params`` is bound at construction: the drain thread launches batches
+    on its own schedule, so it must not depend on caller state at drain
+    time.
+    """
+
+    def __init__(
+        self,
+        engine: BatchedSampler,
+        params,
+        policy: SchedulerPolicy | None = None,
+        clock: Callable[[], float] = time.perf_counter,
+    ):
+        self.engine = engine
+        self.params = params
+        self.policy = policy or SchedulerPolicy()
+        self._clock = clock
+        self._cv = threading.Condition()
+        self._queues: dict[tuple[int, int], deque[tuple[QueueItem, Future]]] = {}
+        self._next_ticket = 0
+        self._thread: threading.Thread | None = None
+        self._stopping = False
+        # telemetry: running counters (a serving process launches batches
+        # for its whole lifetime — no per-batch history is kept)
+        self._batches = 0
+        self._rows = 0
+
+    # ---- client surface -------------------------------------------------
+    def submit(self, req: SampleRequest) -> Future:
+        """Enqueue from any thread; the Future resolves to a SampleResult
+        (or raises, if the fused launch it rode in failed)."""
+        self.engine.executor.validate(req)
+        fut: Future = Future()
+        with self._cv:
+            if self._stopping:
+                raise RuntimeError("scheduler is stopped")
+            ticket = self._next_ticket
+            self._next_ticket += 1
+            item: QueueItem = (ticket, req, self._clock())
+            self._queues.setdefault((req.seq_len, req.nfe), deque()).append(
+                (item, fut)
+            )
+            self._cv.notify()
+        return fut
+
+    @property
+    def pending(self) -> int:
+        with self._cv:
+            return sum(len(q) for q in self._queues.values())
+
+    def stats(self) -> dict:
+        with self._cv:
+            batches, rows = self._batches, self._rows
+            submitted = self._next_ticket
+        return {
+            "submitted": submitted,
+            "batches": batches,
+            "rows": rows,
+            "mean_batch_rows": (rows / batches) if batches else 0.0,
+        }
+
+    # ---- lifecycle (one-shot: stop() is final; build a new scheduler to
+    # serve again) ---------------------------------------------------------
+    def start(self) -> "AsyncBatchedSampler":
+        with self._cv:
+            if self._stopping:
+                raise RuntimeError(
+                    "scheduler is stopped — schedulers are one-shot, "
+                    "construct a new AsyncBatchedSampler to serve again"
+                )
+            if self._thread is not None:
+                raise RuntimeError("scheduler already started")
+            self._thread = threading.Thread(
+                target=self._loop, name="era-scheduler", daemon=True
+            )
+            self._thread.start()
+        return self
+
+    def stop(self) -> None:
+        """Clean shutdown: flush every queued request (their futures all
+        resolve), then join the drain thread."""
+        with self._cv:
+            self._stopping = True
+            self._cv.notify_all()
+            thread, self._thread = self._thread, None
+        if thread is not None:
+            thread.join()
+        else:
+            # never started: flush synchronously so no future is orphaned
+            with self._cv:
+                batches = self._pop_all()
+            self._run_batches(batches)
+
+    def __enter__(self) -> "AsyncBatchedSampler":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.stop()
+
+    # ---- scheduling core (fake-clock testable, no thread required) ------
+    def drain_once(self, now: float | None = None) -> int:
+        """Launch every queue the policy deems ready at ``now``; returns the
+        number of fused batches launched.  This is the drain thread's step
+        function, exposed for manual pumping and fake-clock tests."""
+        with self._cv:
+            batches = self._pop_ready(self._clock() if now is None else now)
+        return self._run_batches(batches)
+
+    def _pop_ready(self, now: float):
+        """Pop ready chunks under the lock, oldest-queue-first."""
+        exe = self.engine.executor
+        ready: list[tuple[float, tuple[int, int]]] = []
+        for key, q in self._queues.items():
+            if not q:
+                continue
+            rows = sum(item[1].batch for item, _ in q)
+            oldest = q[0][0][2]
+            if self.policy.should_launch(now, oldest, rows, exe.max_bucket):
+                ready.append((oldest, key))
+        ready.sort()  # deadline promotion: oldest arrival served first
+        batches = []
+        for _, key in ready:
+            batches.extend(self._pop_chunks(key, full_queue=False))
+        return batches
+
+    def _pop_all(self):
+        batches = []
+        for key in list(self._queues):
+            batches.extend(self._pop_chunks(key, full_queue=True))
+        return batches
+
+    def _pop_chunks(self, key, full_queue: bool):
+        """Take rows from one queue: up to one largest bucket per launch
+        (the remainder keeps its arrival times), or the whole queue on
+        flush.  Non-fusable configs split into exact-size solo chunks."""
+        exe = self.engine.executor
+        q = self._queues[key]
+        taken: list[tuple[QueueItem, Future]] = []
+        total = 0
+        while q:
+            b = q[0][0][1].batch
+            if (
+                not full_queue
+                and taken
+                and exe.max_bucket
+                and total + b > exe.max_bucket
+            ):
+                break
+            entry = q.popleft()
+            taken.append(entry)
+            total += b
+        futures = {item[0]: fut for item, fut in taken}
+        return [
+            (key, chunk, pad, futures)
+            for chunk, pad in exe.pack([item for item, _ in taken])
+        ]
+
+    def _run_batches(self, batches) -> int:
+        """Execute popped chunks outside the queue lock and resolve their
+        futures; a failed launch fails only its own chunk's futures."""
+        for (seq_len, nfe), chunk, pad, futures in batches:
+            results: dict[int, SampleResult] = {}
+            try:
+                self.engine.executor.run_chunk(
+                    self.params, seq_len, nfe, chunk, results, pad=pad
+                )
+            except Exception as e:  # noqa: BLE001 - delivered via futures
+                for ticket, _, _ in chunk:
+                    resolve_future(futures[ticket], exception=e)
+                continue
+            with self._cv:
+                self._batches += 1
+                self._rows += sum(req.batch for _, req, _ in chunk)
+            for ticket, _, _ in chunk:
+                resolve_future(futures[ticket], results[ticket])
+        return len(batches)
+
+    def _next_deadline_s(self, now: float) -> float | None:
+        """Seconds until the nearest queue deadline (None = nothing queued)."""
+        deadlines = [
+            self.policy.deadline(q[0][0][2])
+            for q in self._queues.values()
+            if q
+        ]
+        if not deadlines:
+            return None
+        return max(0.0, min(deadlines) - now)
+
+    def _loop(self) -> None:
+        while True:
+            with self._cv:
+                while not self._stopping:
+                    now = self._clock()
+                    batches = self._pop_ready(now)
+                    if batches:
+                        break
+                    self._cv.wait(timeout=self._next_deadline_s(now))
+                stopping = self._stopping
+                if stopping:
+                    batches = self._pop_all()
+            self._run_batches(batches)
+            if stopping:
+                return

@@ -1,0 +1,158 @@
+"""Arrival-order determinism wall for the continuous-batching scheduler.
+
+The serving contract: a seeded request's ``x0`` is **bit-identical**
+whether it runs
+
+* via the sync engine's ``drain()`` (fused with whoever was pending),
+* via the async scheduler under an arbitrary arrival interleaving — client
+  threads racing, random delays, whatever batch compositions the policy
+  happens to form — or
+* solo through :class:`SamplerService` (exact-size batch, no padding).
+
+Per-sample ERS is what makes this hold (each row's delta_eps measurement
+and Lagrange base selection read only its own row), and this property is
+what makes continuous batching correctness-preserving at all: scheduler
+timing must never leak into results.  Randomized over seq_len / nfe / seeds
+/ arrival delays via `tests/_hypothesis_compat.py` (real hypothesis in CI,
+the deterministic shim in bare environments), and re-checked on the
+8-virtual-device mesh fixture.
+"""
+
+import random
+import threading
+import time
+
+import numpy as np
+
+from _hypothesis_compat import given, settings, st
+from conftest import AnalyticGaussian, OracleDenoiser
+from repro.core import ERAConfig
+from repro.serving import (
+    AsyncBatchedSampler,
+    BatchedSampler,
+    SampleRequest,
+    SamplerService,
+    SchedulerPolicy,
+)
+
+# module-level: the shim's `given` produces zero-arg tests, so no fixtures
+ANALYTIC = AnalyticGaussian()
+
+
+def _requests(n, seq_len, nfe, seed0):
+    return [
+        SampleRequest(batch=1, seq_len=seq_len, nfe=nfe, seed=seed0 + i)
+        for i in range(n)
+    ]
+
+
+def _sync_x0(reqs, mesh=None):
+    engine = BatchedSampler(
+        OracleDenoiser(ANALYTIC),
+        ANALYTIC.schedule,
+        batch_buckets=(2, 4, 8),
+        mesh=mesh,
+    )
+    tickets = [engine.submit(r) for r in reqs]
+    results = engine.drain(params=None)
+    return [np.asarray(results[t].x0) for t in tickets]
+
+
+def _async_x0(reqs, delay_seed, mesh=None):
+    """Run through the scheduler with racing client threads and randomized
+    submission delays — arbitrary arrival interleavings and batch
+    compositions."""
+    engine = BatchedSampler(
+        OracleDenoiser(ANALYTIC),
+        ANALYTIC.schedule,
+        batch_buckets=(2, 4, 8),
+        mesh=mesh,
+    )
+    rng = random.Random(delay_seed)
+    futures: dict[int, object] = {}
+    lock = threading.Lock()
+    with AsyncBatchedSampler(
+        engine,
+        params=None,
+        policy=SchedulerPolicy(max_wait_ms=2.0, target_occupancy=0.5),
+    ) as sched:
+
+        def client(my_reqs):
+            for i, r in my_reqs:
+                time.sleep(rng.uniform(0.0, 0.004))
+                fut = sched.submit(r)
+                with lock:
+                    futures[i] = fut
+
+        indexed = list(enumerate(reqs))
+        threads = [
+            threading.Thread(target=client, args=(indexed[0::2],)),
+            threading.Thread(target=client, args=(indexed[1::2],)),
+        ]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        out = {i: f.result(timeout=120) for i, f in futures.items()}
+    return [np.asarray(out[i].x0) for i in range(len(reqs))]
+
+
+def _solo_x0(reqs, mesh=None):
+    svc = SamplerService(
+        OracleDenoiser(ANALYTIC),
+        ANALYTIC.schedule,
+        solver_config=ERAConfig(per_sample=True),
+        mesh=mesh,
+    )
+    return [np.asarray(svc.sample(None, r)[0]) for r in reqs]
+
+
+@settings(max_examples=4, deadline=None)
+@given(
+    st.integers(min_value=2, max_value=5),       # co-arriving requests
+    st.integers(min_value=2, max_value=8),       # seq_len
+    st.integers(min_value=0, max_value=4),       # nfe headroom above k=4
+    st.integers(min_value=0, max_value=10_000),  # request seed base
+    st.integers(min_value=0, max_value=10_000),  # arrival-delay seed
+)
+def test_x0_bit_identical_across_sync_async_and_solo(
+    n, seq_len, extra, seed0, delay_seed
+):
+    reqs = _requests(n, seq_len, nfe=5 + extra, seed0=seed0)
+    sync = _sync_x0(reqs)
+    asyn = _async_x0(reqs, delay_seed)
+    solo = _solo_x0(reqs)
+    for i, r in enumerate(reqs):
+        np.testing.assert_array_equal(
+            asyn[i],
+            sync[i],
+            err_msg=f"async vs sync diverged for seed {r.seed} "
+            f"(n={n}, seq_len={seq_len}, nfe={r.nfe})",
+        )
+        np.testing.assert_array_equal(
+            asyn[i],
+            solo[i],
+            err_msg=f"async vs solo diverged for seed {r.seed} "
+            f"(n={n}, seq_len={seq_len}, nfe={r.nfe})",
+        )
+
+
+def test_arrival_determinism_on_mesh(mesh8):
+    """The same wall on the 8-virtual-device mesh: scheduler timing must not
+    leak into results when the fused batch is sharded across devices."""
+    reqs = _requests(5, seq_len=6, nfe=8, seed0=77)
+    sync_mesh = _sync_x0(reqs, mesh=mesh8)
+    async_mesh = _async_x0(reqs, delay_seed=3, mesh=mesh8)
+    single = _sync_x0(reqs)
+    for i, r in enumerate(reqs):
+        np.testing.assert_array_equal(
+            async_mesh[i],
+            sync_mesh[i],
+            err_msg=f"mesh async vs mesh sync diverged for seed {r.seed}",
+        )
+        np.testing.assert_allclose(
+            async_mesh[i],
+            single[i],
+            atol=1e-5,
+            err_msg=f"mesh async vs single-device diverged for seed {r.seed}",
+        )

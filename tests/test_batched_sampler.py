@@ -191,6 +191,34 @@ def test_oversize_request_chunks_to_max_bucket(engine):
     assert res[small].x0.shape == (2, 6, D_MODEL)
 
 
+def test_drain_chunk_failure_resolves_futures_and_spares_other_chunks(
+    engine, analytic, monkeypatch
+):
+    """A chunk that fails mid-drain must not orphan any waiter: its tickets'
+    futures carry the exception, other chunks still deliver, and drain()
+    re-raises for its own caller.  Regression: a raise used to skip the
+    future-resolution loop entirely, hanging cross-thread waiters forever."""
+    orig = engine.executor.run_chunk
+
+    def flaky(params, seq_len, nfe, chunk, results, pad=True):
+        if seq_len == 4:
+            raise RuntimeError("injected chunk failure")
+        return orig(params, seq_len, nfe, chunk, results, pad=pad)
+
+    monkeypatch.setattr(engine.executor, "run_chunk", flaky)
+    bad = engine.submit(SampleRequest(batch=1, seq_len=4, nfe=8, seed=0))
+    good = engine.submit(SampleRequest(batch=1, seq_len=6, nfe=8, seed=1))
+    bad_fut, good_fut = engine.future(bad), engine.future(good)
+    with pytest.raises(RuntimeError, match="injected"):
+        engine.drain(params=None)
+    with pytest.raises(RuntimeError, match="injected"):
+        bad_fut.result(timeout=0)
+    assert good_fut.result(timeout=0).x0.shape == (1, 6, D_MODEL)
+    # delivery popped the futures: late lookups fail loudly, not silently
+    with pytest.raises(KeyError, match="already delivered"):
+        engine.future(good)
+
+
 def test_shared_delta_config_not_fused(analytic):
     """Paper-default (shared delta_eps) configs couple the batch through one
     global error norm, so the engine must serve them unfused and unpadded —
@@ -271,6 +299,54 @@ def test_padding_invariance_at_serving_buckets(bucket, analytic):
 # mesh-sharded drain (tentpole acceptance: parity with the single-device
 # engine on 8 virtual CPU devices)
 # ---------------------------------------------------------------------------
+
+
+def test_shared_delta_on_mesh_rejects_non_dp_batches(mesh8, analytic):
+    """Shared-delta (per_sample=False) requests run exact-size — padding
+    would change the global error norm — so on a mesh their batch must be a
+    dp multiple.  Regression: this used to bypass dp rounding and silently
+    degrade the whole drain to replicated placement."""
+    eng = BatchedSampler(
+        OracleDenoiser(analytic),
+        analytic.schedule,
+        solver_config=ERAConfig(per_sample=False),
+        batch_buckets=(8,),
+        mesh=mesh8,
+    )
+    with pytest.raises(ValueError, match="data-parallel"):
+        eng.submit(SampleRequest(batch=3, seq_len=6, nfe=10, seed=0))
+    assert eng.pending == 0  # the rejected request never queued
+
+    # a dp-multiple batch is accepted, runs exact-size AND sharded, and
+    # matches the single-device engine
+    t = eng.submit(SampleRequest(batch=8, seq_len=6, nfe=10, seed=1))
+    res = eng.drain(params=None)[t]
+    assert res.padded_batch == 8
+    assert len(res.x0.sharding.device_set) == 8  # not replicated
+    solo = BatchedSampler(
+        OracleDenoiser(analytic),
+        analytic.schedule,
+        solver_config=ERAConfig(per_sample=False),
+        batch_buckets=None,
+    )
+    ts = solo.submit(SampleRequest(batch=8, seq_len=6, nfe=10, seed=1))
+    np.testing.assert_allclose(
+        np.asarray(res.x0),
+        np.asarray(solo.drain(params=None)[ts].x0),
+        atol=1e-5,
+    )
+
+
+def test_shared_delta_off_mesh_accepts_any_batch(analytic):
+    """dp=1 (no mesh): every batch is a dp multiple, nothing is rejected."""
+    eng = BatchedSampler(
+        OracleDenoiser(analytic),
+        analytic.schedule,
+        solver_config=ERAConfig(per_sample=False),
+        batch_buckets=(8,),
+    )
+    t = eng.submit(SampleRequest(batch=3, seq_len=6, nfe=10, seed=0))
+    assert eng.drain(params=None)[t].x0.shape == (3, 6, D_MODEL)
 
 
 def test_mesh_drain_parity_with_single_device_engine():

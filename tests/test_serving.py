@@ -104,6 +104,19 @@ def test_sampler_service_solver_choice():
     assert np.max(np.abs(outs["ddim"] - outs["era"])) > 1e-6  # different paths
 
 
+def test_sampler_service_surfaces_engine_telemetry():
+    """The facade's info dict carries the same telemetry as the engine's
+    SampleResult: latency_s and padded_batch, not just wall_s + aux."""
+    cfg = get_config("qwen2-1.5b", smoke=True)
+    dlm = DiffusionLM(build_model(cfg))
+    params = dlm.init(KEY)
+    svc = SamplerService(dlm, linear_schedule(), "era", ERAConfig(nfe=6, k=3))
+    x0, info = svc.sample(params, SampleRequest(batch=2, seq_len=8, nfe=6))
+    assert info["padded_batch"] == 2  # exact-size facade buckets
+    assert info["latency_s"] >= info["wall_s"] > 0
+    assert "delta_eps_history" in info
+
+
 def test_sample_program_lowerable():
     """The whole ERA sampling loop lowers as one XLA program."""
     cfg = get_config("llama3.2-1b", smoke=True)
