@@ -29,6 +29,16 @@ Mesh sweep (`--mesh`): reruns the scenarios on 1 vs 8 virtual host devices
 (`XLA_FLAGS=--xla_force_host_platform_device_count=8`, one child process per
 device count since the flag binds at jax init) with the engine batch-sharded
 over a ("data",) mesh — the same placement a TPU pod slice would use.
+
+Solver sweep (`--solver-sweep`): runs **every registry solver** through one
+engine via per-request `solver=` routing (the PR-4 solver-program refactor:
+each baseline gets the same single-scan compile, donated buffers, and
+bucketed batching ERA has) at batch sizes 1 and 8, and writes
+`BENCH_solvers.json` — steady-state walltime/throughput and the number of
+XLA programs compiled per solver (the CI bench-smoke job uploads it).
+This is the engine-side substrate for the paper's comparison tables: every
+solver rides the same serving path, so walltime differences are solver
+math, not engine favoritism.
 """
 
 import argparse
@@ -43,6 +53,7 @@ import time
 import numpy as np
 
 from benchmarks import common as C
+from repro.core import solver_names
 from repro.serving import (
     AsyncBatchedSampler,
     BatchedSampler,
@@ -260,6 +271,82 @@ def run_poisson(out_path: str = "BENCH_serving.json") -> None:
         )
 
 
+def run_solver_sweep(out_path: str = "BENCH_solvers.json") -> None:
+    """Every registry solver through the engine at bs 1 / 8 via per-request
+    routing: steady-state walltime + compile count per solver."""
+    dlm, params, data, cfg = C.trained_model(30 if C.SMOKE else 150)
+    nfe = 6 if C.SMOKE else 10
+    seq = 8
+    batch_sizes = (1, 8)
+    engine = BatchedSampler(dlm, C.SCHEDULE, batch_buckets=batch_sizes)
+    record = {
+        "bench": "serving/solver-sweep",
+        "smoke": C.SMOKE,
+        "nfe": nfe,
+        "seq_len": seq,
+        "batch_sizes": list(batch_sizes),
+        "solvers": {},
+    }
+
+    for solver in solver_names():
+        compiled_before = len(engine.compile_cache())
+        entry = {"buckets": {}}
+        for bs in batch_sizes:
+
+            def drain_once(offset: int):
+                tickets = [
+                    engine.submit(
+                        SampleRequest(
+                            batch=1,
+                            seq_len=seq,
+                            nfe=nfe,
+                            solver=solver,
+                            seed=offset + i,
+                        )
+                    )
+                    for i in range(bs)
+                ]
+                t0 = time.perf_counter()
+                results = engine.drain(params)
+                wall = time.perf_counter() - t0
+                return tickets, results, wall
+
+            drain_once(0)  # compile warmup for this (solver, bucket)
+            repeats = 1 if C.SMOKE else 3
+            best_wall, lat = float("inf"), 0.0
+            for r in range(repeats):
+                tickets, results, wall = drain_once(1000 * (r + 1))
+                if wall < best_wall:
+                    best_wall = wall
+                    lat = sum(results[t].latency_s for t in tickets) / bs
+            entry["buckets"][str(bs)] = {
+                "wall_s": best_wall,
+                "lat_ms": lat * 1e3,
+                "throughput_rps": bs / best_wall,
+            }
+            C.emit(
+                f"serving/sweep/{solver}/bs{bs}",
+                best_wall * 1e6,
+                f"lat_ms={lat * 1e3:.2f},thpt={bs / best_wall:.1f}/s",
+            )
+        # compile accounting: each solver should add exactly one XLA program
+        # per batch bucket it ran at, and no solver recompiles another's
+        entry["compiled_programs"] = len(engine.compile_cache()) - compiled_before
+        record["solvers"][solver] = entry
+
+    record["total_compiled_programs"] = len(engine.compile_cache())
+    with open(out_path, "w") as f:
+        json.dump(record, f, indent=2)
+    print(f"# wrote {out_path}")
+    expected = len(batch_sizes)
+    for solver, entry in record["solvers"].items():
+        if entry["compiled_programs"] > expected:
+            print(
+                f"# WARNING: {solver} compiled {entry['compiled_programs']} "
+                f"programs (expected <= {expected} — one per bucket)"
+            )
+
+
 def run_on_local_mesh() -> None:
     """Child entry for the mesh sweep: engine sharded over all local devices
     (a 1-device mesh degenerates to the plain path, same program)."""
@@ -308,9 +395,16 @@ if __name__ == "__main__":
         "per-request drains",
     )
     ap.add_argument(
+        "--solver-sweep",
+        action="store_true",
+        help="run every registry solver through the engine at bs 1/8 via "
+        "per-request routing; writes walltime + compile count per solver",
+    )
+    ap.add_argument(
         "--out",
-        default="BENCH_serving.json",
-        help="JSON artifact path for the --poisson sweep",
+        default=None,
+        help="JSON artifact path (default BENCH_serving.json for --poisson, "
+        "BENCH_solvers.json for --solver-sweep)",
     )
     args = ap.parse_args()
     if args.mesh:
@@ -318,6 +412,8 @@ if __name__ == "__main__":
     elif args.mesh_child:
         run_on_local_mesh()
     elif args.poisson:
-        run_poisson(args.out)
+        run_poisson(args.out or "BENCH_serving.json")
+    elif args.solver_sweep:
+        run_solver_sweep(args.out or "BENCH_solvers.json")
     else:
         run()

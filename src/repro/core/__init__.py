@@ -2,13 +2,20 @@
 
 Public API:
     get_solver(name)                 -> sampling function
+    get_program(name)                -> SolverProgram (the serving surface)
     SolverConfig / ERAConfig         -> solver options
     NoiseSchedule / get_schedule     -> VP noise schedules
     timesteps                        -> solver time grids
 """
 
 from repro.core.era import ERAConfig, era_combine
-from repro.core.registry import default_config, get_solver, solver_names
+from repro.core.program import SolverProgram
+from repro.core.registry import (
+    default_config,
+    get_program,
+    get_solver,
+    solver_names,
+)
 from repro.core.schedules import (
     NoiseSchedule,
     cosine_schedule,
@@ -23,10 +30,12 @@ __all__ = [
     "NoiseSchedule",
     "SolverConfig",
     "SolverOutput",
+    "SolverProgram",
     "cosine_schedule",
     "ddim_step",
     "default_config",
     "era_combine",
+    "get_program",
     "get_schedule",
     "get_solver",
     "linear_schedule",

@@ -11,6 +11,13 @@
 
 The "fixed" ablation of Table 4 (Lagrange predictor with fixed last-k
 selection) is :func:`repro.core.era.sample` with ``selection="fixed"``.
+
+Engine notes: both loops are single ``jax.lax.scan`` programs over the
+step grid with fixed-capacity eps/t history buffers threaded in as
+explicit arguments (:class:`ExplicitAdamsProgram`,
+:class:`ImplicitAdamsPECEProgram`) — same shape discipline as ERA — so a
+jitting caller donates the buffers and one compile covers a whole
+(sample-shape, nfe) bucket, batch-shardable over a mesh.
 """
 
 from __future__ import annotations
@@ -18,6 +25,12 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.core.program import (
+    SolverProgram,
+    constrain_buffers,
+    constrain_x,
+    trajectory_aux,
+)
 from repro.core.schedules import NoiseSchedule, timesteps
 from repro.core.solver_base import (
     EpsFn,
@@ -26,8 +39,7 @@ from repro.core.solver_base import (
     buffer_append,
     buffer_init,
     ddim_step,
-    trajectory_append,
-    trajectory_init,
+    step_grid,
 )
 
 Array = jax.Array
@@ -52,37 +64,52 @@ def _ab_combine(eps_buf: Array, i: Array, order: int) -> Array:
     return out
 
 
-def explicit_adams_sample(
+def _ab_predict(eps_buf: Array, i: Array, order: int) -> Array:
+    """AB combine at the best order available at step i (warmup ramps the
+    order up instead of burning extra NFE, FON-style)."""
+    branches = [lambda _, o=o: _ab_combine(eps_buf, i, o) for o in range(1, order + 1)]
+    eff = jnp.minimum(i + 1, order)  # order available at step i
+    return jax.lax.switch(eff - 1, branches, None)
+
+
+def alloc_buffers(
+    x: Array, config: SolverConfig, shardings=None, num_steps: int | None = None
+) -> tuple[Array, Array]:
+    """Fresh eps/t history buffers for an Adams run (``num_steps`` defaults
+    to ``config.nfe`` — PECE passes its halved step count).  With
+    ``shardings``, the eps buffer is created batch-sharded in place."""
+    cap = (config.nfe if num_steps is None else num_steps) + 1
+    return buffer_init(x, cap, config.solver_dtype, shardings)
+
+
+def explicit_adams_scan(
     eps_fn: EpsFn,
     x_init: Array,
+    eps_buf: Array,      # (nfe+1, *x.shape) zeros, donatable
+    t_buf: Array,        # (nfe+1,) zeros, donatable
     schedule: NoiseSchedule,
     config: SolverConfig,
     order: int = 4,
+    shardings=None,
 ) -> SolverOutput:
-    """AB-`order` linear multistep in eps-space (PNDM-style), 1 NFE/step.
-
-    Warmup uses increasing order (1,2,3) instead of PNDM's Runge--Kutta so
-    no extra NFE are burned (FON-style)."""
+    """AB-`order` linear multistep in eps-space (PNDM-style), 1 NFE/step."""
     n = config.nfe
     ts = timesteps(schedule, n, config.scheme, t_end=config.t_end)
     dt = config.solver_dtype
+    if eps_buf.shape != (n + 1,) + x_init.shape:
+        raise ValueError(
+            f"eps buffer shape {eps_buf.shape} != {(n + 1,) + x_init.shape}"
+        )
 
-    x = x_init.astype(dt)
-    eps_buf, t_buf = buffer_init(x, n + 1, dt)
+    x = constrain_x(x_init.astype(dt), shardings)
+    eps_buf, t_buf = constrain_buffers(eps_buf, t_buf, shardings)
     e0 = eps_fn(x, ts[0]).astype(dt)
     eps_buf, t_buf = buffer_append(eps_buf, t_buf, jnp.int32(0), e0, ts[0])
-    traj = trajectory_init(x, n, config.return_trajectory)
 
-    def body(i, carry):
-        x, eps_buf, t_buf, traj = carry
-        t_cur, t_next = ts[i], ts[i + 1]
-
-        branches = []
-        for o in range(1, order + 1):
-            branches.append(lambda _, o=o: _ab_combine(eps_buf, i, o))
-        eff = jnp.minimum(i + 1, order)  # order available at step i
-        eps_c = jax.lax.switch(eff - 1, branches, None)
-
+    def step(carry, inp):
+        x, eps_buf, t_buf = carry
+        i, t_cur, t_next = inp
+        eps_c = _ab_predict(eps_buf, i, order)
         x_next = ddim_step(schedule, x, eps_c, t_cur, t_next)
 
         def observe(_):
@@ -92,43 +119,67 @@ def explicit_adams_sample(
             i + 1 < n, observe, lambda _: jnp.zeros_like(x_next), None
         )
         eps_buf2, t_buf2 = buffer_append(eps_buf, t_buf, i + 1, e_new, t_next)
-        traj = trajectory_append(traj, i + 1, x_next)
-        return (x_next, eps_buf2, t_buf2, traj)
+        traj_x = x_next if config.return_trajectory else None
+        return (x_next, eps_buf2, t_buf2), traj_x
 
-    x, eps_buf, t_buf, traj = jax.lax.fori_loop(0, n, body, (x, eps_buf, t_buf, traj))
-    aux = {"trajectory": traj} if traj is not None else {}
+    (x, eps_buf, t_buf), traj_tail = jax.lax.scan(
+        step, (x, eps_buf, t_buf), step_grid(ts)
+    )
+    aux = trajectory_aux(x_init, traj_tail, config.return_trajectory, dtype=dt)
     return SolverOutput(x0=x.astype(x_init.dtype), nfe=jnp.int32(n), aux=aux)
 
 
-def implicit_adams_pece_sample(
+def explicit_adams_sample(
     eps_fn: EpsFn,
     x_init: Array,
     schedule: NoiseSchedule,
     config: SolverConfig,
+    order: int = 4,
+) -> SolverOutput:
+    eps_buf, t_buf = alloc_buffers(x_init.astype(config.solver_dtype), config)
+    return explicit_adams_scan(
+        eps_fn, x_init, eps_buf, t_buf, schedule, config, order=order
+    )
+
+
+def pece_num_steps(nfe: int) -> int:
+    """PECE spends 2 NFE per step: budget B buys B//2 steps."""
+    return max(nfe // 2, 1)
+
+
+def implicit_adams_pece_scan(
+    eps_fn: EpsFn,
+    x_init: Array,
+    eps_buf: Array,      # (n_steps+1, *x.shape) zeros, donatable
+    t_buf: Array,        # (n_steps+1,) zeros, donatable
+    schedule: NoiseSchedule,
+    config: SolverConfig,
+    shardings=None,
 ) -> SolverOutput:
     """Traditional PECE implicit Adams (2 NFE/step).
 
     With an NFE budget B the solver takes B//2 steps.  The history buffer
     stores evaluations at *corrected* points.
     """
-    n_steps = max(config.nfe // 2, 1)
+    n_steps = pece_num_steps(config.nfe)
     ts = timesteps(schedule, n_steps, config.scheme, t_end=config.t_end)
     dt = config.solver_dtype
+    if eps_buf.shape != (n_steps + 1,) + x_init.shape:
+        raise ValueError(
+            f"eps buffer shape {eps_buf.shape} != "
+            f"{(n_steps + 1,) + x_init.shape}"
+        )
 
-    x = x_init.astype(dt)
-    eps_buf, t_buf = buffer_init(x, n_steps + 1, dt)
+    x = constrain_x(x_init.astype(dt), shardings)
+    eps_buf, t_buf = constrain_buffers(eps_buf, t_buf, shardings)
     e0 = eps_fn(x, ts[0]).astype(dt)
     eps_buf, t_buf = buffer_append(eps_buf, t_buf, jnp.int32(0), e0, ts[0])
-    traj = trajectory_init(x, n_steps, config.return_trajectory)
 
-    def body(i, carry):
-        x, eps_buf, t_buf, traj = carry
-        t_cur, t_next = ts[i], ts[i + 1]
-
+    def step(carry, inp):
+        x, eps_buf, t_buf = carry
+        i, t_cur, t_next = inp
         # P: AB predictor at the best order available
-        branches = [lambda _, o=o: _ab_combine(eps_buf, i, o) for o in (1, 2, 3, 4)]
-        eff = jnp.minimum(i + 1, 4)
-        eps_p = jax.lax.switch(eff - 1, branches, None)
+        eps_p = _ab_predict(eps_buf, i, 4)
         x_pred = ddim_step(schedule, x, eps_p, t_cur, t_next)
         # E: evaluate at the predicted point
         e_bar = eps_fn(x_pred, t_next).astype(dt)
@@ -146,6 +197,7 @@ def implicit_adams_pece_sample(
         # trapezoid fallback while history is short
         eps_c = jnp.where(i >= 2, eps_c, 0.5 * (e_bar + e_i))
         x_next = ddim_step(schedule, x, eps_c, t_cur, t_next)
+
         # E: evaluate at the corrected point for the history buffer
         def observe(_):
             return eps_fn(x_next, t_next).astype(dt)
@@ -154,13 +206,74 @@ def implicit_adams_pece_sample(
             i + 1 < n_steps, observe, lambda _: jnp.zeros_like(x_next), None
         )
         eps_buf2, t_buf2 = buffer_append(eps_buf, t_buf, i + 1, e_new, t_next)
-        traj = trajectory_append(traj, i + 1, x_next)
-        return (x_next, eps_buf2, t_buf2, traj)
+        traj_x = x_next if config.return_trajectory else None
+        return (x_next, eps_buf2, t_buf2), traj_x
 
-    x, eps_buf, t_buf, traj = jax.lax.fori_loop(
-        0, n_steps, body, (x, eps_buf, t_buf, traj)
+    (x, eps_buf, t_buf), traj_tail = jax.lax.scan(
+        step, (x, eps_buf, t_buf), step_grid(ts)
     )
-    aux = {"trajectory": traj} if traj is not None else {}
+    aux = trajectory_aux(x_init, traj_tail, config.return_trajectory, dtype=dt)
     return SolverOutput(
         x0=x.astype(x_init.dtype), nfe=jnp.int32(2 * n_steps - 1), aux=aux
     )
+
+
+def implicit_adams_pece_sample(
+    eps_fn: EpsFn,
+    x_init: Array,
+    schedule: NoiseSchedule,
+    config: SolverConfig,
+) -> SolverOutput:
+    eps_buf, t_buf = alloc_buffers(
+        x_init.astype(config.solver_dtype),
+        config,
+        num_steps=pece_num_steps(config.nfe),
+    )
+    return implicit_adams_pece_scan(
+        eps_fn, x_init, eps_buf, t_buf, schedule, config
+    )
+
+
+class ExplicitAdamsProgram(SolverProgram):
+    name = "explicit_adams"
+
+    def num_buffers(self, cfg):
+        return 2
+
+    def alloc_buffers(self, x_like, cfg, shardings=None):
+        return alloc_buffers(x_like.astype(cfg.solver_dtype), cfg, shardings)
+
+    def sample_scan(self, eps_fn, x_init, buffers, schedule, cfg, shardings=None):
+        eps_buf, t_buf = buffers
+        return explicit_adams_scan(
+            eps_fn, x_init, eps_buf, t_buf, schedule, cfg, shardings=shardings
+        )
+
+
+class ImplicitAdamsPECEProgram(SolverProgram):
+    name = "implicit_adams_pece"
+
+    def num_buffers(self, cfg):
+        return 2
+
+    def validate(self, req, cfg, dp=1):
+        super().validate(req, cfg, dp=dp)
+        if req.nfe < 2:
+            raise ValueError(
+                f"implicit_adams_pece spends 2 NFE per PECE step, so its "
+                f"budget must be >= 2; got nfe={req.nfe}"
+            )
+
+    def alloc_buffers(self, x_like, cfg, shardings=None):
+        return alloc_buffers(
+            x_like.astype(cfg.solver_dtype),
+            cfg,
+            shardings,
+            num_steps=pece_num_steps(cfg.nfe),
+        )
+
+    def sample_scan(self, eps_fn, x_init, buffers, schedule, cfg, shardings=None):
+        eps_buf, t_buf = buffers
+        return implicit_adams_pece_scan(
+            eps_fn, x_init, eps_buf, t_buf, schedule, cfg, shardings=shardings
+        )

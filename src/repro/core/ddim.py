@@ -2,6 +2,11 @@
 
 Deterministic (eta = 0) DDIM is exactly Euler on the diffusion ODE in the
 (alpha, sigma)-parameterization; the paper's Eq. 8.  1 NFE per step.
+
+Engine notes: the loop is a single ``jax.lax.scan`` over the step grid
+(:class:`DDIMProgram`), so one jit compile covers a whole (sample-shape,
+nfe) bucket and the serving engine can batch-shard the carry over a mesh.
+DDIM keeps no history, so the program has no donatable buffers.
 """
 
 from __future__ import annotations
@@ -9,15 +14,38 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.core.program import SolverProgram, constrain_x, trajectory_aux
 from repro.core.schedules import NoiseSchedule, timesteps
 from repro.core.solver_base import (
     EpsFn,
     SolverConfig,
     SolverOutput,
     ddim_step,
-    trajectory_append,
-    trajectory_init,
+    step_grid,
 )
+
+
+def sample_scan(
+    eps_fn: EpsFn,
+    x_init: jax.Array,
+    schedule: NoiseSchedule,
+    config: SolverConfig,
+    shardings=None,
+) -> SolverOutput:
+    n = config.nfe
+    ts = timesteps(schedule, n, config.scheme, t_end=config.t_end)
+    x = constrain_x(x_init, shardings)
+
+    def step(carry, inp):
+        x = carry
+        _i, t_cur, t_next = inp
+        eps = eps_fn(x, t_cur)
+        x_next = ddim_step(schedule, x, eps, t_cur, t_next)
+        return x_next, (x_next if config.return_trajectory else None)
+
+    x, traj_tail = jax.lax.scan(step, x, step_grid(ts))
+    aux = trajectory_aux(x_init, traj_tail, config.return_trajectory)
+    return SolverOutput(x0=x, nfe=jnp.int32(n), aux=aux)
 
 
 def sample(
@@ -26,18 +54,12 @@ def sample(
     schedule: NoiseSchedule,
     config: SolverConfig,
 ) -> SolverOutput:
-    n = config.nfe
-    ts = timesteps(schedule, n, config.scheme, t_end=config.t_end)
-    traj = trajectory_init(x_init, n, config.return_trajectory)
+    return sample_scan(eps_fn, x_init, schedule, config)
 
-    def body(i, carry):
-        x, traj = carry
-        t_cur, t_next = ts[i], ts[i + 1]
-        eps = eps_fn(x, t_cur)
-        x = ddim_step(schedule, x, eps, t_cur, t_next)
-        traj = trajectory_append(traj, i + 1, x)
-        return (x, traj)
 
-    x, traj = jax.lax.fori_loop(0, n, body, (x_init, traj))
-    aux = {"trajectory": traj} if traj is not None else {}
-    return SolverOutput(x0=x, nfe=jnp.int32(n), aux=aux)
+class DDIMProgram(SolverProgram):
+    name = "ddim"
+
+    def sample_scan(self, eps_fn, x_init, buffers, schedule, cfg, shardings=None):
+        assert not buffers
+        return sample_scan(eps_fn, x_init, schedule, cfg, shardings=shardings)

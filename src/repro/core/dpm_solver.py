@@ -8,16 +8,22 @@ an arbitrary NFE budget exactly (paper's comparison rows).
 
 The step sequencing (orders per step) is static Python, so a sampling run is
 an unrolled XLA program — fine for the solver benchmarks, and jit-cacheable
-per (budget, schedule) pair.
+per (budget, schedule) pair.  DPM-Solver++(2M) (:func:`sample_pp2m`), the
+multistep 1-NFE/step variant the serving engine cares about, is instead a
+single ``jax.lax.scan`` program over the step grid
+(:class:`DPMpp2MProgram`), batch-shardable over a mesh like ERA.
 """
 
 from __future__ import annotations
 
+import functools
+
 import jax
 import jax.numpy as jnp
 
+from repro.core.program import SolverProgram, constrain_x, trajectory_aux
 from repro.core.schedules import NoiseSchedule, timesteps
-from repro.core.solver_base import EpsFn, SolverConfig, SolverOutput
+from repro.core.solver_base import EpsFn, SolverConfig, SolverOutput, step_grid
 
 Array = jax.Array
 
@@ -81,11 +87,12 @@ def _step3(eps_fn, sched, x, t, t_next, r1=1.0 / 3.0, r2=2.0 / 3.0):
 _STEPS = {1: _step1, 2: _step2, 3: _step3}
 
 
-def sample_pp2m(
+def sample_pp2m_scan(
     eps_fn: EpsFn,
     x_init: Array,
     schedule: NoiseSchedule,
     config: SolverConfig,
+    shardings=None,
 ) -> SolverOutput:
     """DPM-Solver++(2M) (Lu et al. 2022b) — the multistep data-prediction
     variant the paper benchmarks against on Stable Diffusion (Appendix E).
@@ -93,7 +100,8 @@ def sample_pp2m(
     Works in x0-space: x0_i = (x - sigma eps)/alpha;
       D_i = (1 + 1/(2 r_i)) x0_i - 1/(2 r_i) x0_{i-1},  r_i = h_{i-1}/h_i
       x_{i+1} = (sigma_{i+1}/sigma_i) x_i - alpha_{i+1} expm1(-h_i) D_i
-    1 NFE per step (like DDIM/ERA), second order.
+    1 NFE per step (like DDIM/ERA), second order.  The multistep carry is
+    ``(x, x0_prev)`` — no history buffer beyond the previous x0 prediction.
     """
     n = config.nfe
     ts = timesteps(schedule, n, "logsnr", t_end=config.t_end)
@@ -101,15 +109,13 @@ def sample_pp2m(
     alpha, sigma = schedule.alpha(ts), schedule.sigma(ts)
     dt = config.solver_dtype
 
-    x = x_init.astype(dt)
+    x = constrain_x(x_init.astype(dt), shardings)
 
-    def x0_of(x, i):
-        e = eps_fn(x, ts[i]).astype(dt)
-        return (x - sigma[i].astype(dt) * e) / alpha[i].astype(dt)
-
-    def body(i, carry):
+    def step(carry, inp):
         x, x0_prev = carry
-        x0 = x0_of(x, i)
+        i, t_cur, _t_next = inp
+        e = eps_fn(x, t_cur).astype(dt)
+        x0 = (x - sigma[i].astype(dt) * e) / alpha[i].astype(dt)
         h = lam[i + 1] - lam[i]
         h_prev = lam[i] - lam[jnp.maximum(i - 1, 0)]
         r = h_prev / h
@@ -119,10 +125,23 @@ def sample_pp2m(
         x_next = (sigma[i + 1] / sigma[i]).astype(dt) * x - (
             alpha[i + 1] * jnp.expm1(-h)
         ).astype(dt) * d
-        return (x_next, x0)
+        traj_x = x_next if config.return_trajectory else None
+        return (x_next, x0), traj_x
 
-    x, _ = jax.lax.fori_loop(0, n, body, (x, jnp.zeros_like(x)))
-    return SolverOutput(x0=x.astype(x_init.dtype), nfe=jnp.int32(n), aux={})
+    (x, _), traj_tail = jax.lax.scan(
+        step, (x, jnp.zeros_like(x)), step_grid(ts)
+    )
+    aux = trajectory_aux(x_init, traj_tail, config.return_trajectory, dtype=dt)
+    return SolverOutput(x0=x.astype(x_init.dtype), nfe=jnp.int32(n), aux=aux)
+
+
+def sample_pp2m(
+    eps_fn: EpsFn,
+    x_init: Array,
+    schedule: NoiseSchedule,
+    config: SolverConfig,
+) -> SolverOutput:
+    return sample_pp2m_scan(eps_fn, x_init, schedule, config)
 
 
 def _order_plan(nfe: int, max_order: int) -> list[int]:
@@ -172,3 +191,39 @@ def sample(
     return SolverOutput(
         x0=x.astype(x_init.dtype), nfe=jnp.int32(sum(plan)), aux={}
     )
+
+
+class DPMpp2MProgram(SolverProgram):
+    name = "dpm_solver_pp2m"
+
+    def validate(self, req, cfg, dp=1):
+        super().validate(req, cfg, dp=dp)
+        if req.nfe < 2:
+            raise ValueError(
+                f"dpm_solver_pp2m is a 2-step multistep method whose first "
+                f"step is order-1 warmup; it needs nfe >= 2, got "
+                f"nfe={req.nfe}"
+            )
+
+    def sample_scan(self, eps_fn, x_init, buffers, schedule, cfg, shardings=None):
+        assert not buffers
+        return sample_pp2m_scan(eps_fn, x_init, schedule, cfg, shardings=shardings)
+
+
+class DPMSolverProgram(SolverProgram):
+    """Singlestep DPM-Solver (orders 2/3 + the "fast" mixed-order plan).
+
+    The order plan is static Python, so the "program" is the unrolled XLA
+    graph — still one jit compile per (sample-shape, nfe) bucket, still
+    row-independent (fusable), just without a scan carry to shard beyond
+    the latents themselves."""
+
+    def __init__(self, name: str, order: int, fast: bool):
+        self.name = name
+        self._sample = functools.partial(sample, order=order, fast=fast)
+
+    def sample_scan(self, eps_fn, x_init, buffers, schedule, cfg, shardings=None):
+        assert not buffers
+        x = constrain_x(x_init, shardings)
+        out = self._sample(eps_fn, x, schedule, cfg)
+        return out

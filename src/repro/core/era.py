@@ -48,6 +48,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import lagrange
+from repro.core.program import SolverProgram
 from repro.core.schedules import NoiseSchedule, timesteps
 from repro.core.solver_base import (
     EpsFn,
@@ -164,14 +165,7 @@ def alloc_buffers(
     largest array in a sampling run — is created batch-sharded in place
     rather than materialized on one device and redistributed.
     """
-    if shardings is None:
-        return buffer_init(x, config.nfe + 1, config.solver_dtype)
-    cap = config.nfe + 1
-    eps_buf = jnp.zeros(
-        (cap,) + x.shape, config.solver_dtype, device=shardings.eps_buf
-    )
-    t_buf = jnp.zeros((cap,), jnp.float32, device=shardings.t_buf)
-    return eps_buf, t_buf
+    return buffer_init(x, config.nfe + 1, config.solver_dtype, shardings)
 
 
 def sample(
@@ -334,3 +328,64 @@ def sample_scan(
             [x_init.astype(dt)[None], traj_tail], axis=0
         )
     return SolverOutput(x0=x.astype(x_init.dtype), nfe=jnp.int32(n), aux=aux)
+
+
+class ERAProgram(SolverProgram):
+    """ERA-Solver as a serving program.
+
+    The paper-default config shares one scalar delta_eps across the batch —
+    every row couples through that global error norm, so such configs are
+    not fusable (strangers or pad rows would change each request's result).
+    The engine default turns on per-sample ERS, which makes a batch-of-N
+    run equivalent to N independent runs and the program fully fusable."""
+
+    name = "era"
+    config_cls = ERAConfig
+    aux_row_axes = {"trajectory": 1, "delta_eps_history_per_sample": 1}
+
+    def engine_config(self) -> ERAConfig:
+        # per-sample ERS isolates co-batched requests from each other
+        return ERAConfig(per_sample=True)
+
+    def fusable(self, cfg: ERAConfig) -> bool:
+        return cfg.per_sample
+
+    def per_sample_state(self, cfg: ERAConfig) -> bool:
+        return cfg.per_sample
+
+    def validate(self, req, cfg: ERAConfig, dp: int = 1) -> None:
+        super().validate(req, cfg, dp=dp)
+        if req.nfe < cfg.k:
+            raise ValueError(
+                f"ERA-Solver needs nfe >= k ({req.nfe} < {cfg.k}); "
+                "lower k in the engine's solver_config or raise nfe"
+            )
+
+    def num_buffers(self, cfg: ERAConfig) -> int:
+        return 2
+
+    def alloc_buffers(self, x_like, cfg: ERAConfig, shardings=None):
+        return alloc_buffers(x_like, cfg, shardings)
+
+    def pre_compile(self, cfg: ERAConfig) -> None:
+        # consult the fused-kernel parity gate eagerly — the probe cannot
+        # run inside a jit trace, and a process serving only compiled
+        # buckets would otherwise never enable the Pallas step
+        if cfg.use_fused_update:
+            _fused_ops()
+
+    def sample_scan(self, eps_fn, x_init, buffers, schedule, cfg, shardings=None):
+        eps_buf, t_buf = buffers
+        return sample_scan(
+            eps_fn, x_init, eps_buf, t_buf, schedule, cfg, shardings=shardings
+        )
+
+    def scope_aux(self, aux: dict, off: int, batch: int) -> dict:
+        scoped = super().scope_aux(aux, off, batch)
+        if scoped is not aux and "delta_eps_history_per_sample" in scoped:
+            # the batch-mean diagnostic must cover only this request's rows
+            # (pad rows would dilute it; batch-mates would leak into it)
+            scoped["delta_eps_history"] = jnp.mean(
+                scoped["delta_eps_history_per_sample"], axis=-1
+            )
+        return scoped

@@ -1,0 +1,205 @@
+"""Solver programs — the uniform compiled-sampling contract of the engine.
+
+A :class:`SolverProgram` is what the serving stack knows about a solver.
+Every registry solver (ERA and every baseline the paper compares against)
+implements the same surface, so `repro.serving.FusedExecutor` can fuse,
+shard, donate buffers for, and route requests to *any* solver without
+solver-specific branches:
+
+* ``alloc_buffers(x_like, cfg, shardings)`` — fixed-capacity history
+  buffers (the Lagrange/Adams eps+t buffers), allocated outside the jitted
+  program so the caller can donate them (``donate_argnums``) and XLA
+  updates them in place across the whole sampling scan.  Solvers without
+  history state return ``()``.
+* ``sample_scan(eps_fn, x_init, buffers, schedule, cfg, shardings)`` — the
+  single-``lax.scan``(-or-unrolled) XLA program over the step grid.  One
+  jit compile covers a whole (sample-shape, nfe) bucket.  Carry
+  initialization lives inside (it may spend an NFE on the first
+  observation), so there is no separate ``init_carry`` hook.
+* ``carry_pspecs`` / ``carry_shardings`` — mesh placement for the scan
+  carry (latents batch-sharded over the data axes, history buffers
+  batch-sharded on axis 1, time grid replicated), derived from
+  ``per_sample_state`` so per-sample solver state shards with its rows.
+* ``fusable(cfg)`` / ``validate(req, cfg, dp)`` — request policy: can
+  strangers (and pad rows) share a batch under this config, and which
+  (batch, nfe) requests are legal (ERA's ``nfe >= k``, PECE's 2-NFE/step
+  budget, DPM++(2M)'s multistep warmup).  ``req`` is duck-typed (needs
+  ``.batch`` and ``.nfe``) so core stays import-free of the serving layer.
+* ``scope_aux(aux, off, batch)`` + ``aux_row_axes`` — aux-scoping
+  metadata: which diagnostics carry a padded-batch axis, so a co-batched
+  request sees only its own rows (no batch-mate/tenant or pad-row
+  leakage).
+* ``pre_compile(cfg)`` — eager hook consulted before a caller jits the
+  program (ERA uses it to run the fused-kernel parity probe, which cannot
+  execute inside a jit trace).
+
+Concrete programs live next to their solver math (``DDIMProgram`` in
+``ddim.py``, ...) and are registered in :mod:`repro.core.registry`.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Mapping
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.schedules import NoiseSchedule
+from repro.core.solver_base import EpsFn, SolverConfig, SolverOutput
+
+Array = jax.Array
+
+
+class SolverProgram:
+    """Base solver program: a fusable, bufferless, batch-row-independent
+    solver.  Subclasses override the hooks their solver needs."""
+
+    #: registry name (set by each concrete program)
+    name: str = ""
+    #: config dataclass this program consumes
+    config_cls: type[SolverConfig] = SolverConfig
+    #: aux keys whose value carries the padded batch on the given axis
+    aux_row_axes: Mapping[str, int] = {"trajectory": 1}
+
+    # ---- configs ---------------------------------------------------------
+    def default_config(self, **kw) -> SolverConfig:
+        """The paper-default config (what ``core.default_config`` returns)."""
+        return self.config_cls(**kw)
+
+    def engine_config(self) -> SolverConfig:
+        """The serving-engine default config.  Programs whose paper default
+        couples batch rows override this with an isolation-safe variant
+        (ERA turns on per-sample ERS)."""
+        return self.config_cls()
+
+    # ---- request policy --------------------------------------------------
+    def fusable(self, cfg: SolverConfig) -> bool:
+        """Can strangers (and pad rows) share a fused batch under ``cfg``?
+        True whenever every batch row's math reads only its own row."""
+        return True
+
+    def per_sample_state(self, cfg: SolverConfig) -> bool:
+        """Does the scan carry per-sample ``(B,)``-shaped solver state that
+        should shard with its rows (ERA's per-sample delta_eps)?"""
+        return False
+
+    def validate(self, req: Any, cfg: SolverConfig, dp: int = 1) -> None:
+        """Reject an illegal request at submit time.  ``req`` needs
+        ``.batch`` and ``.nfe``.  Base rule: a non-fusable config runs
+        unpadded (exact size), so on a mesh its batch must split evenly
+        over the data axes."""
+        if req.nfe < 1:
+            raise ValueError(f"nfe must be >= 1, got {req.nfe}")
+        if not self.fusable(cfg) and dp > 1 and req.batch % dp:
+            raise ValueError(
+                f"{self.name} requests under this config are not fusable and "
+                f"run unpadded, so on a mesh their batch must be a multiple "
+                f"of the data-parallel size ({dp}); got batch={req.batch}."
+            )
+
+    # ---- buffers / placement --------------------------------------------
+    def num_buffers(self, cfg: SolverConfig) -> int:
+        """How many donatable buffer arrays ``alloc_buffers`` returns
+        (static per config — the jit donate_argnums depend on it)."""
+        return 0
+
+    def alloc_buffers(
+        self, x_like: Array, cfg: SolverConfig, shardings=None
+    ) -> tuple[Array, ...]:
+        """Fresh donatable history buffers for one sampling run (empty for
+        history-free solvers).  With ``shardings``, buffers are created
+        batch-sharded in place instead of materialized on one device."""
+        return ()
+
+    def carry_pspecs(self, cfg: SolverConfig, mesh, *, batch=None, x_ndim=3):
+        """PartitionSpecs for this program's scan carry on ``mesh``."""
+        from repro.parallel.sharding import solver_carry_pspecs
+
+        return solver_carry_pspecs(
+            mesh, self, cfg, batch=batch, x_ndim=x_ndim
+        )
+
+    def carry_shardings(self, cfg: SolverConfig, mesh, *, batch=None, x_ndim=3):
+        """``carry_pspecs`` bound to ``mesh`` as NamedShardings — what
+        ``sample_scan`` takes as its ``shardings`` argument."""
+        from repro.parallel.sharding import solver_carry_shardings
+
+        return solver_carry_shardings(
+            mesh, self, cfg, batch=batch, x_ndim=x_ndim
+        )
+
+    # ---- compiled entry --------------------------------------------------
+    def pre_compile(self, cfg: SolverConfig) -> None:
+        """Eager hook run before a caller jits ``sample_scan`` (probes that
+        cannot execute mid-trace, e.g. ERA's fused-kernel parity gate)."""
+
+    def sample_scan(
+        self,
+        eps_fn: EpsFn,
+        x_init: Array,
+        buffers: tuple[Array, ...],
+        schedule: NoiseSchedule,
+        cfg: SolverConfig,
+        shardings=None,
+    ) -> SolverOutput:
+        """The solver loop as one XLA program, with ``buffers`` threaded in
+        explicitly so a jitting caller can donate them."""
+        raise NotImplementedError
+
+    def sample(
+        self,
+        eps_fn: EpsFn,
+        x_init: Array,
+        schedule: NoiseSchedule,
+        cfg: SolverConfig,
+    ) -> SolverOutput:
+        """Self-contained entry: allocates buffers, then runs the program
+        (the ``get_solver(name)(...)`` back-compat surface)."""
+        return self.sample_scan(
+            eps_fn, x_init, self.alloc_buffers(x_init, cfg), schedule, cfg
+        )
+
+    # ---- aux scoping -----------------------------------------------------
+    def scope_aux(self, aux: dict, off: int, batch: int) -> dict:
+        """Scope solver diagnostics to one request's rows inside a fused
+        padded batch, per :attr:`aux_row_axes`.  A co-batched request must
+        see only its own rows — not its batch-mates' (tenant isolation) and
+        not the pad rows."""
+        hit = {k: ax for k, ax in self.aux_row_axes.items() if aux.get(k) is not None}
+        if not hit:
+            return aux
+        scoped = dict(aux)
+        for key, axis in hit.items():
+            idx = (slice(None),) * axis + (slice(off, off + batch),)
+            scoped[key] = aux[key][idx]
+        return scoped
+
+
+def constrain_x(x: Array, shardings) -> Array:
+    """Pin the latents' sharding inside a program (no-op off-mesh)."""
+    if shardings is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, shardings.x)
+
+
+def constrain_buffers(
+    eps_buf: Array, t_buf: Array, shardings
+) -> tuple[Array, Array]:
+    """Pin the eps/t history buffers' shardings (no-op off-mesh)."""
+    if shardings is None:
+        return eps_buf, t_buf
+    return (
+        jax.lax.with_sharding_constraint(eps_buf, shardings.eps_buf),
+        jax.lax.with_sharding_constraint(t_buf, shardings.t_buf),
+    )
+
+
+def trajectory_aux(
+    x_init: Array, traj_tail: Array | None, enabled: bool, dtype=None
+) -> dict[str, Array]:
+    """Assemble the ``trajectory`` aux from a scan's stacked per-step
+    latents (ys), prepending the initial state."""
+    if not enabled or traj_tail is None:
+        return {}
+    x0 = x_init if dtype is None else x_init.astype(dtype)
+    return {"trajectory": jnp.concatenate([x0[None], traj_tail], axis=0)}

@@ -54,15 +54,28 @@ def ddim_step(
     return cx.astype(x.dtype) * x + ce.astype(x.dtype) * eps.astype(x.dtype)
 
 
-def buffer_init(x_like: Array, capacity: int, dtype) -> tuple[Array, Array]:
+def buffer_init(
+    x_like: Array, capacity: int, dtype, shardings=None
+) -> tuple[Array, Array]:
     """Fixed-capacity noise/time buffers (the paper's Lagrange buffer Omega).
 
     TPU adaptation: Algorithm 1 appends to a Python list; we preallocate
     ``capacity`` slots and append via ``dynamic_update_index_in_dim`` so the
     whole sampling loop stays inside a single XLA program.
+
+    With ``shardings`` (duck-typed ``.eps_buf``/``.t_buf`` NamedShardings),
+    the eps buffer — the largest array in a sampling run — is created
+    batch-sharded in place rather than materialized on one device and
+    redistributed.
     """
-    eps_buf = jnp.zeros((capacity,) + x_like.shape, dtype)
-    t_buf = jnp.zeros((capacity,), jnp.float32)
+    if shardings is None:
+        eps_buf = jnp.zeros((capacity,) + x_like.shape, dtype)
+        t_buf = jnp.zeros((capacity,), jnp.float32)
+        return eps_buf, t_buf
+    eps_buf = jnp.zeros(
+        (capacity,) + x_like.shape, dtype, device=shardings.eps_buf
+    )
+    t_buf = jnp.zeros((capacity,), jnp.float32, device=shardings.t_buf)
     return eps_buf, t_buf
 
 

@@ -24,7 +24,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import arch_names, get_config
-from repro.core import ERAConfig, SolverConfig, linear_schedule, solver_names
+from repro.core import ERAConfig, default_config, linear_schedule, solver_names
 from repro.data import frontend_features
 from repro.models import build_model
 from repro.models.diffusion import DiffusionLM
@@ -40,25 +40,39 @@ from repro.serving import (
 )
 
 
+def _solver_config(args, per_sample: bool = False):
+    if args.solver == "era":
+        return ERAConfig(
+            nfe=args.nfe, k=args.k, lam=args.lam, per_sample=per_sample
+        )
+    return default_config(args.solver, nfe=args.nfe)
+
+
 def run_continuous(dlm, params, args) -> None:
-    """Open-loop Poisson client against the continuous-batching scheduler."""
-    sc = (
-        ERAConfig(nfe=args.nfe, k=args.k, lam=args.lam, per_sample=True)
-        if args.solver == "era"
-        else SolverConfig(nfe=args.nfe)
-    )
+    """Open-loop Poisson client against the continuous-batching scheduler.
+
+    With ``--mix solver_a,solver_b,...`` the stream cycles requests through
+    several registry solvers — each request routes to its own solver's
+    program inside one engine (per-(solver, seq_len, nfe) fuse queues)."""
+    mix = [s.strip() for s in args.mix.split(",")] if args.mix else [args.solver]
     engine = BatchedSampler(
-        dlm, linear_schedule(), args.solver, sc, batch_buckets=(1, 8, 64)
+        dlm,
+        linear_schedule(),
+        args.solver,
+        _solver_config(args, per_sample=True),
+        batch_buckets=(1, 8, 64),
     )
-    # compile every bucket program before the timed stream
-    for bucket in engine.batch_buckets:
-        for i in range(bucket):
-            engine.submit(
-                SampleRequest(
-                    batch=1, seq_len=args.seq, nfe=args.nfe, seed=10_000 + i
+    # compile every (solver, bucket) program before the timed stream
+    for solver in mix:
+        for bucket in engine.batch_buckets:
+            for i in range(bucket):
+                engine.submit(
+                    SampleRequest(
+                        batch=1, seq_len=args.seq, nfe=args.nfe,
+                        solver=solver, seed=10_000 + i,
+                    )
                 )
-            )
-        engine.drain(params)
+            engine.drain(params)
 
     policy = SchedulerPolicy(
         max_wait_ms=args.max_wait_ms, target_occupancy=args.occupancy
@@ -73,7 +87,7 @@ def run_continuous(dlm, params, args) -> None:
                 sched.submit(
                     SampleRequest(
                         batch=1, seq_len=args.seq, nfe=args.nfe,
-                        seed=args.seed + i,
+                        solver=mix[i % len(mix)], seed=args.seed + i,
                     )
                 )
             ),
@@ -83,7 +97,7 @@ def run_continuous(dlm, params, args) -> None:
         stats = sched.stats()
     lats_ms = np.array([r.latency_s for r in results]) * 1e3
     print(
-        f"continuous: {args.requests} req @ {args.rate:.1f}/s "
+        f"continuous[{','.join(mix)}]: {args.requests} req @ {args.rate:.1f}/s "
         f"(max_wait={policy.max_wait_ms}ms occ={policy.target_occupancy}) | "
         f"p50={np.percentile(lats_ms, 50):.1f}ms "
         f"p99={np.percentile(lats_ms, 99):.1f}ms "
@@ -116,6 +130,13 @@ def main() -> None:
         "continuous-batching scheduler (diffusion mode only)",
     )
     ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument(
+        "--mix",
+        default=None,
+        help="comma-separated registry solvers to cycle the --continuous "
+        "stream through (per-request routing in one engine), e.g. "
+        "'era,ddim,dpm_solver_pp2m'",
+    )
     ap.add_argument("--rate", type=float, default=20.0, help="arrivals/s")
     ap.add_argument("--max-wait-ms", type=float, default=25.0)
     ap.add_argument(
@@ -137,12 +158,9 @@ def main() -> None:
         if args.continuous:
             run_continuous(dlm, params, args)
             return
-        sc = (
-            ERAConfig(nfe=args.nfe, k=args.k, lam=args.lam)
-            if args.solver == "era"
-            else SolverConfig(nfe=args.nfe)
+        svc = SamplerService(
+            dlm, linear_schedule(), args.solver, _solver_config(args)
         )
-        svc = SamplerService(dlm, linear_schedule(), args.solver, sc)
         req = SampleRequest(
             batch=args.batch, seq_len=args.seq, nfe=args.nfe, seed=args.seed
         )

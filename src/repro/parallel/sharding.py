@@ -56,12 +56,16 @@ def round_to_dp(n: int, mesh: Mesh | None) -> int:
 
 
 class SamplerSpecs(NamedTuple):
-    """PartitionSpecs for the ERA sampling scan carry.
+    """PartitionSpecs for a solver program's sampling scan carry.
 
-    Mirrors the carry of ``core.era.sample_scan``: the latents ``x``
-    (batch-leading), the Lagrange ``eps_buf`` ``(nfe+1, B, ...)`` — batch is
-    axis 1, like KV caches — the replicated ``t_buf`` time grid, and the ERS
-    error state ``delta_eps`` ((B,) per-sample, scalar otherwise).
+    The field set covers the union of the registry programs' carries: the
+    latents ``x`` (batch-leading, every solver), the eps history ``eps_buf``
+    ``(cap, B, ...)`` — batch is axis 1, like KV caches — and replicated
+    ``t_buf`` time grid (ERA / Adams-family history buffers), and the
+    per-sample solver state ``delta_eps`` ((B,) for per-sample ERS, scalar
+    otherwise).  Programs read the fields their carry uses and ignore the
+    rest (DDIM touches only ``x``; DPM++(2M)'s ``x0_prev`` shards like
+    ``x``).
     """
 
     x: P
@@ -116,11 +120,49 @@ def sampler_shardings(
     x_ndim: int = 3,
 ) -> SamplerShardings:
     """``sampler_pspecs`` materialized as NamedShardings on ``mesh`` (what
-    ``core.era.sample_scan`` takes as its ``shardings`` argument)."""
+    a program's ``sample_scan`` takes as its ``shardings`` argument)."""
     specs = sampler_pspecs(
         mesh, batch=batch, per_sample=per_sample, x_ndim=x_ndim
     )
     return SamplerShardings(*(NamedSharding(mesh, s) for s in specs))
+
+
+def solver_carry_pspecs(
+    mesh: Mesh,
+    program,
+    config,
+    *,
+    batch: int | None = None,
+    x_ndim: int = 3,
+) -> SamplerSpecs:
+    """Carry PartitionSpecs for a :class:`repro.core.SolverProgram`.
+
+    The program declares whether its carry holds per-sample ``(B,)`` solver
+    state (``per_sample_state(cfg)``); everything else follows the shared
+    batch-over-data-axes layout of :func:`sampler_pspecs`."""
+    return sampler_pspecs(
+        mesh,
+        batch=batch,
+        per_sample=program.per_sample_state(config),
+        x_ndim=x_ndim,
+    )
+
+
+def solver_carry_shardings(
+    mesh: Mesh,
+    program,
+    config,
+    *,
+    batch: int | None = None,
+    x_ndim: int = 3,
+) -> SamplerShardings:
+    """:func:`solver_carry_pspecs` bound to ``mesh`` as NamedShardings."""
+    return sampler_shardings(
+        mesh,
+        batch=batch,
+        per_sample=program.per_sample_state(config),
+        x_ndim=x_ndim,
+    )
 
 
 class ParamReplicator:

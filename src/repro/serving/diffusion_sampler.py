@@ -13,8 +13,15 @@ Architecture:
 * :class:`BatchedSampler` — the sync engine.  ``submit()`` enqueues requests
   (from any thread) and returns a ticket whose :class:`~concurrent.futures.
   Future` resolves at drain time; ``drain()`` groups pending requests by
-  (seq_len, nfe), pads each group's batch up to a shape bucket, and runs
-  each chunk through the shared executor.
+  (solver, seq_len, nfe), pads each group's batch up to a shape bucket, and
+  runs each chunk through the shared executor.
+* **Per-request solver routing** — ``SampleRequest.solver`` names any
+  registry solver (``era``, ``ddim``, ``dpm_solver_pp2m``, ...); the
+  executor routes each request to that solver's
+  :class:`~repro.core.SolverProgram` (None = the engine's default solver).
+  Every program gets the same engine treatment ERA does: a single-scan
+  compile per bucket, donated history buffers, mesh-sharded carries, and
+  per-request aux scoping — there is no solver-specific code in serving/.
 * :class:`~repro.serving.scheduler.AsyncBatchedSampler` — the
   continuous-batching front end over the same executor: a background drain
   thread batches requests across arrival time under a
@@ -50,7 +57,7 @@ from concurrent.futures import Future
 import jax
 from jax.sharding import Mesh
 
-from repro.core import ERAConfig, NoiseSchedule, SolverConfig, get_solver
+from repro.core import NoiseSchedule, SolverConfig, get_program
 from repro.core import era as era_mod
 from repro.models.diffusion import DiffusionLM
 from repro.serving.executor import (
@@ -165,7 +172,8 @@ class BatchedSampler:
             return len(self._pending)
 
     def drain(self, params) -> dict[int, SampleResult]:
-        """Run all pending requests, fused per (seq_len, nfe) shape bucket.
+        """Run all pending requests, fused per (solver, seq_len, nfe)
+        bucket.
 
         Also resolves each drained ticket's Future, so a drain from one
         thread delivers results to submitters waiting on other threads.
@@ -176,14 +184,17 @@ class BatchedSampler:
         """
         with self._queue_lock:
             pending, self._pending = self._pending, []
-        groups: dict[tuple[int, int], list[QueueItem]] = {}
+        # only same-(solver, seq_len, nfe) requests can fuse into one
+        # compiled bucket — mixed-solver traffic batches per solver
+        groups: dict[tuple[str, int, int], list[QueueItem]] = {}
         for item in pending:
             _, req, _ = item
-            groups.setdefault((req.seq_len, req.nfe), []).append(item)
+            key = (self.executor.resolve_solver(req), req.seq_len, req.nfe)
+            groups.setdefault(key, []).append(item)
 
         results: dict[int, SampleResult] = {}
         failure: Exception | None = None
-        for (seq_len, nfe), items in groups.items():
+        for (_solver, seq_len, nfe), items in groups.items():
             for chunk, pad in self.executor.pack(items):
                 try:
                     self.executor.run_chunk(
@@ -227,7 +238,9 @@ class SamplerService:
         self.schedule = schedule
         self.solver_name = solver
         if solver_config is None:
-            solver_config = ERAConfig() if solver == "era" else SolverConfig()
+            # the facade defaults to the paper config (shared-delta ERA),
+            # not the engine's fusable serving default — it runs exact-size
+            solver_config = get_program(solver).default_config()
         self.solver_config = solver_config
         self._engine = BatchedSampler(
             dlm, schedule, solver, solver_config, batch_buckets=None, mesh=mesh
@@ -247,7 +260,7 @@ class SamplerService:
 
     # ---- dry-run hook: the full solver loop as one lowerable program ----
     def sample_program(self):
-        sample_fn = get_solver(self.solver_name)
+        sample_fn = get_program(self.solver_name).sample
         cfg = self.solver_config
 
         def program(params, x_init):

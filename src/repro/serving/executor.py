@@ -2,14 +2,24 @@
 
 :class:`FusedExecutor` owns everything below the request queue: request
 validation, bucket selection, mesh placement, the jit cache (one compiled
-program per (config, padded-batch, seq_len) bucket), chunk execution, and
-per-request aux scoping.  Both entry points share one executor instance:
+program per (solver, config, padded-batch, seq_len) bucket), chunk
+execution, and per-request aux scoping.  Both entry points share one
+executor instance:
 
 * the sync :class:`~repro.serving.diffusion_sampler.BatchedSampler.drain`
   path, which fuses whatever is pending at call time, and
 * the continuous-batching
   :class:`~repro.serving.scheduler.AsyncBatchedSampler`, whose background
   drain thread fuses requests across arrival time.
+
+The executor is **solver-agnostic**: every registry solver is a
+:class:`~repro.core.SolverProgram` (scan entry + donatable buffers + carry
+shardings + request policy), so there are no solver-specific branches here.
+``SampleRequest.solver`` routes each request to its program — one executor
+serves a mixed ``era`` / ``ddim`` / ``dpm_solver_pp2m`` / ... stream, with
+requests batched per solver (the jit cache and the scheduler's fuse queues
+key on ``(solver, seq_len, nfe)``, so mixed traffic never cross-contaminates
+a bucket).
 
 All mutable state (jit cache, shardings cache, param replication cache) is
 guarded by one re-entrant lock, and chunk execution itself is serialized
@@ -31,14 +41,13 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh
 
-from repro.core import ERAConfig, NoiseSchedule, SolverConfig, get_solver
-from repro.core import era as era_mod
+from repro.core import NoiseSchedule, SolverConfig, get_program
+from repro.core.program import SolverProgram
 from repro.models.diffusion import DiffusionLM
 from repro.parallel.sharding import (
     ParamReplicator,
     dp_size,
     round_to_dp,
-    sampler_shardings,
 )
 
 Array = jax.Array
@@ -49,7 +58,9 @@ class SampleRequest:
     batch: int
     seq_len: int
     nfe: int = 10
-    solver: str = "era"
+    # registry solver this request routes to; None = the engine's default
+    # solver.  Unknown names are rejected at submit(), not drain time.
+    solver: str | None = None
     seed: int = 0
 
 
@@ -104,12 +115,15 @@ class FusedExecutor:
         self.dlm = dlm
         self.schedule = schedule
         self.solver_name = solver
-        if solver_config is None:
-            # per-sample ERS isolates co-batched requests from each other
-            solver_config = (
-                ERAConfig(per_sample=True) if solver == "era" else SolverConfig()
-            )
-        self.solver_config = solver_config
+        # per-solver engine configs: the constructor pins the default
+        # solver's config; other solvers a request routes to lazily get
+        # their program's engine default (e.g. per-sample ERS for ERA)
+        self._configs: dict[str, SolverConfig] = {}
+        self._configs[solver] = (
+            get_program(solver).engine_config()
+            if solver_config is None
+            else solver_config
+        )
         self.mesh = mesh
         self.dp = dp_size(mesh) if mesh is not None else 1
         if batch_buckets:
@@ -122,20 +136,35 @@ class FusedExecutor:
         self._replicate = ParamReplicator(mesh) if mesh is not None else None
         self._lock = threading.RLock()
 
+    # ---- solver routing --------------------------------------------------
+    def resolve_solver(self, req: SampleRequest) -> str:
+        """The registry name this request routes to."""
+        return req.solver or self.solver_name
+
+    def program_for(self, solver: str | None) -> SolverProgram:
+        return get_program(solver or self.solver_name)
+
+    def config_for(self, solver: str | None) -> SolverConfig:
+        name = solver or self.solver_name
+        cfg = self._configs.get(name)
+        if cfg is None:
+            cfg = self._configs[name] = get_program(name).engine_config()
+        return cfg
+
+    @property
+    def solver_config(self) -> SolverConfig:
+        """The engine's default solver's config (back-compat surface)."""
+        return self.config_for(self.solver_name)
+
     # ---- request policy --------------------------------------------------
     @property
     def fusable(self) -> bool:
-        """Can strangers (and pad rows) share a batch under this config?
+        """Can strangers (and pad rows) share a batch under the default
+        solver's config?  (Per-request: :meth:`fusable_for`.)"""
+        return self.fusable_for(None)
 
-        ERA with a shared (non-per-sample) delta_eps couples every batch row
-        through one global error norm — fusing strangers or adding pad rows
-        would change each request's result — so such configs are served one
-        exact-size request at a time instead.
-        """
-        return (
-            not isinstance(self.solver_config, ERAConfig)
-            or self.solver_config.per_sample
-        )
+    def fusable_for(self, solver: str | None) -> bool:
+        return self.program_for(solver).fusable(self.config_for(solver))
 
     @property
     def max_bucket(self) -> int | None:
@@ -143,35 +172,24 @@ class FusedExecutor:
 
     def validate(self, req: SampleRequest) -> None:
         """Reject an invalid request at submit time, not drain time — a bad
-        request must not poison the queue for its co-batched neighbours."""
+        request must not poison the queue for its co-batched neighbours.
+        Unknown solver names fail here; per-solver (batch, nfe) constraints
+        live in each program's ``validate``."""
         if req.batch < 1:
             raise ValueError(f"batch must be >= 1, got {req.batch}")
-        k = getattr(self.solver_config, "k", None)
-        if k is not None and req.nfe < k:
-            raise ValueError(
-                f"ERA-Solver needs nfe >= k ({req.nfe} < {k}); "
-                "lower k in the engine's solver_config or raise nfe"
-            )
-        if not self.fusable and self.dp > 1 and req.batch % self.dp:
-            # shared-delta configs run exact-size (padding would change the
-            # global error norm), so a mesh drain cannot round them up to a
-            # dp multiple — reject instead of silently degrading the whole
-            # run to replicated placement
-            raise ValueError(
-                f"shared-delta (per_sample=False) ERA requests run unpadded, "
-                f"so on a mesh their batch must be a multiple of the "
-                f"data-parallel size ({self.dp}); got batch={req.batch}. "
-                "Use a dp-multiple batch or per_sample=True."
-            )
+        program = self.program_for(req.solver)  # unknown solver raises here
+        program.validate(req, self.config_for(req.solver), dp=self.dp)
 
     def pack(self, items: list[QueueItem]) -> list[tuple[list[QueueItem], bool]]:
-        """Split same-(seq_len, nfe) items into executable chunks.
+        """Split same-(solver, seq_len, nfe) items into executable chunks.
 
         Fusable configs pack greedily up to the largest batch bucket;
         non-fusable configs get one exact-size (unpadded) chunk per request.
         Returns ``(chunk, pad)`` pairs.
         """
-        if not self.fusable:
+        if not items:
+            return []
+        if not self.fusable_for(items[0][1].solver):
             return [([item], False) for item in items]
         chunks: list[tuple[list[QueueItem], bool]] = []
         chunk: list[QueueItem] = []
@@ -198,18 +216,15 @@ class FusedExecutor:
         return round_to_dp(n, self.mesh)
 
     # ---- mesh placement ------------------------------------------------
-    def _shardings(self, batch: int):
-        """Carry shardings for a padded batch (None off-mesh)."""
+    def _shardings(self, program: SolverProgram, cfg: SolverConfig, batch: int):
+        """Carry shardings for a padded batch (None off-mesh), via the
+        program's carry-pspec hook."""
         if self.mesh is None:
             return None
-        key = batch
+        key = (batch, program.per_sample_state(cfg))
         if key not in self._shardings_cache:
-            per_sample = (
-                isinstance(self.solver_config, ERAConfig)
-                and self.solver_config.per_sample
-            )
-            self._shardings_cache[key] = sampler_shardings(
-                self.mesh, batch=batch, per_sample=per_sample
+            self._shardings_cache[key] = program.carry_shardings(
+                cfg, self.mesh, batch=batch
             )
         return self._shardings_cache[key]
 
@@ -223,13 +238,17 @@ class FusedExecutor:
         pad: bool = True,
     ) -> None:
         """Run one chunk as a single fused program; fill ``results`` by
-        ticket.  Serialized under the executor lock — safe to call from the
-        scheduler thread and sync drain() callers concurrently."""
+        ticket.  All requests in a chunk share one solver (the queues and
+        drain groups key on it).  Serialized under the executor lock — safe
+        to call from the scheduler thread and sync drain() callers
+        concurrently."""
         with self._lock:
             self._run_chunk_locked(params, seq_len, nfe, chunk, results, pad)
 
     def _run_chunk_locked(self, params, seq_len, nfe, chunk, results, pad):
         d = self.dlm.config.d_model
+        solver = self.resolve_solver(chunk[0][1])
+        program = self.program_for(solver)
         total = sum(req.batch for _, req, _ in chunk)
         padded = self.bucket_batch(total) if pad else total
         # assemble the batch on the host: eager jnp.concatenate would XLA-
@@ -252,18 +271,15 @@ class FusedExecutor:
             parts.append(np.zeros((padded - total, seq_len, d), np.float32))
         x_init = jnp.asarray(np.concatenate(parts, axis=0))
 
-        cfg = dataclasses.replace(self.solver_config, nfe=nfe)
-        shardings = self._shardings(padded)
+        cfg = dataclasses.replace(self.config_for(solver), nfe=nfe)
+        shardings = self._shardings(program, cfg, padded)
         if shardings is not None:
             x_init = jax.device_put(x_init, shardings.x)
             params = self._replicate(params)
-        run = self._runner(cfg, padded, seq_len)
+        run = self._runner(solver, cfg, padded, seq_len)
         t0 = time.perf_counter()
-        if self.solver_name == "era":
-            eps_buf, t_buf = era_mod.alloc_buffers(x_init, cfg, shardings)
-            x0, aux = run(params, x_init, eps_buf, t_buf)
-        else:
-            x0, aux = run(params, x_init)
+        buffers = program.alloc_buffers(x_init, cfg, shardings)
+        x0, aux = run(params, x_init, *buffers)
         x0 = jax.block_until_ready(x0)
         wall = time.perf_counter() - t0
 
@@ -272,75 +288,47 @@ class FusedExecutor:
         for ticket, req, t_submit in chunk:
             results[ticket] = SampleResult(
                 x0=x0[off : off + req.batch],
-                aux=self._request_aux(aux, off, req.batch),
+                aux=program.scope_aux(aux, off, req.batch),
                 latency_s=done - t_submit,
                 batch_wall_s=wall,
                 padded_batch=padded,
             )
             off += req.batch
 
-    @staticmethod
-    def _request_aux(aux, off: int, batch: int):
-        """Scope the solver diagnostics to one request's rows.
-
-        Per-sample runs carry a (nfe, padded_batch) delta_eps history, and
-        return_trajectory runs carry (nfe+1, padded_batch, ...) latents; a
-        co-batched request must see only its own rows — not its batch-mates'
-        (tenant isolation) and not the pad rows, which would also dilute the
-        delta_eps mean."""
-        per_sample = aux.get("delta_eps_history_per_sample")
-        trajectory = aux.get("trajectory")
-        if per_sample is None and trajectory is None:
-            return aux
-        scoped = dict(aux)
-        if per_sample is not None:
-            rows = per_sample[:, off : off + batch]
-            scoped["delta_eps_history_per_sample"] = rows
-            scoped["delta_eps_history"] = jnp.mean(rows, axis=-1)
-        if trajectory is not None:
-            scoped["trajectory"] = trajectory[:, off : off + batch]
-        return scoped
-
-    def _runner(self, cfg: SolverConfig, batch: int, seq_len: int):
-        """One jitted program per (config, padded-batch, seq_len) bucket.
+    def _runner(self, solver: str, cfg: SolverConfig, batch: int, seq_len: int):
+        """One jitted program per (solver, config, padded-batch, seq_len)
+        bucket.
 
         Mesh-aware: the key carries the data-parallel size so an engine
         rebuilt on a different mesh never aliases a cached program."""
-        key = (self.solver_name, cfg, batch, seq_len, self.dp)
+        key = (solver, cfg, batch, seq_len, self.dp)
         if key not in self._jitted:
-            shardings = self._shardings(batch)
-            if self.solver_name == "era":
-                # consult the parity gate here, eagerly — the probe cannot
-                # run inside the jit trace below, and this is the first ERA
-                # touch on a fresh process serving only compiled buckets
-                era_mod._fused_ops()
+            program = self.program_for(solver)
+            shardings = self._shardings(program, cfg, batch)
+            # eager pre-compile hook: probes that cannot run inside the jit
+            # trace below (ERA's fused-kernel parity gate)
+            program.pre_compile(cfg)
 
-                def run(params, x_init, eps_buf, t_buf):
-                    out = era_mod.sample_scan(
-                        self.dlm.eps_fn(params),
-                        x_init,
-                        eps_buf,
-                        t_buf,
-                        self.schedule,
-                        cfg,
-                        shardings=shardings,
-                    )
-                    return out.x0, out.aux
+            def run(params, x_init, *buffers):
+                out = program.sample_scan(
+                    self.dlm.eps_fn(params),
+                    x_init,
+                    buffers,
+                    self.schedule,
+                    cfg,
+                    shardings=shardings,
+                )
+                return out.x0, out.aux
 
-                # donate x + Lagrange buffers so XLA reuses them in place
-                # (CPU ignores donation and would warn, so gate it)
-                donate = (1, 2, 3) if jax.default_backend() != "cpu" else ()
-                self._jitted[key] = jax.jit(run, donate_argnums=donate)
-            else:
-                sample_fn = get_solver(self.solver_name)
-
-                def run(params, x_init):
-                    out = sample_fn(
-                        self.dlm.eps_fn(params), x_init, self.schedule, cfg
-                    )
-                    return out.x0, out.aux
-
-                self._jitted[key] = jax.jit(run)
+            # donate x + the program's history buffers so XLA reuses them
+            # in place (CPU ignores donation and would warn, so gate it)
+            nbuf = program.num_buffers(cfg)
+            donate = (
+                tuple(range(1, 2 + nbuf))
+                if jax.default_backend() != "cpu"
+                else ()
+            )
+            self._jitted[key] = jax.jit(run, donate_argnums=donate)
         return self._jitted[key]
 
     # ---- introspection (tests / benchmarks) ----------------------------

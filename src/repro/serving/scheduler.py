@@ -9,8 +9,10 @@ the standard continuous-batching shape for fixed-cost (known-NFE) solvers:
 * ``submit()`` is callable from any thread and returns a
   :class:`concurrent.futures.Future` that resolves to a
   :class:`~repro.serving.executor.SampleResult`;
-* requests land in per-(seq_len, nfe) queues (only same-shape requests can
-  fuse into one compiled bucket);
+* requests land in per-(solver, seq_len, nfe) queues (only same-shape
+  requests routed to the same solver program can fuse into one compiled
+  bucket — a mixed ``era`` / ``ddim`` / ... stream batches per solver
+  instead of cross-contaminating a bucket);
 * a background drain thread launches a queue when it reaches the policy's
   target bucket occupancy, or when its oldest request has waited
   ``max_wait_ms`` (deadline promotion — a lone request can never starve);
@@ -127,7 +129,11 @@ class AsyncBatchedSampler:
         self.policy = policy or SchedulerPolicy()
         self._clock = clock
         self._cv = threading.Condition()
-        self._queues: dict[tuple[int, int], deque[tuple[QueueItem, Future]]] = {}
+        # fuse queues keyed (solver, seq_len, nfe): only same-solver,
+        # same-shape requests may share a compiled bucket
+        self._queues: dict[
+            tuple[str, int, int], deque[tuple[QueueItem, Future]]
+        ] = {}
         self._next_ticket = 0
         self._thread: threading.Thread | None = None
         self._stopping = False
@@ -148,9 +154,12 @@ class AsyncBatchedSampler:
             ticket = self._next_ticket
             self._next_ticket += 1
             item: QueueItem = (ticket, req, self._clock())
-            self._queues.setdefault((req.seq_len, req.nfe), deque()).append(
-                (item, fut)
+            key = (
+                self.engine.executor.resolve_solver(req),
+                req.seq_len,
+                req.nfe,
             )
+            self._queues.setdefault(key, deque()).append((item, fut))
             self._cv.notify()
         return fut
 
@@ -220,7 +229,7 @@ class AsyncBatchedSampler:
     def _pop_ready(self, now: float):
         """Pop ready chunks under the lock, oldest-queue-first."""
         exe = self.engine.executor
-        ready: list[tuple[float, tuple[int, int]]] = []
+        ready: list[tuple[float, tuple[str, int, int]]] = []
         for key, q in self._queues.items():
             if not q:
                 continue
@@ -269,7 +278,7 @@ class AsyncBatchedSampler:
     def _run_batches(self, batches) -> int:
         """Execute popped chunks outside the queue lock and resolve their
         futures; a failed launch fails only its own chunk's futures."""
-        for (seq_len, nfe), chunk, pad, futures in batches:
+        for (_solver, seq_len, nfe), chunk, pad, futures in batches:
             results: dict[int, SampleResult] = {}
             try:
                 self.engine.executor.run_chunk(

@@ -1,0 +1,197 @@
+"""Pre-refactor (PR-3-era) solver implementations, kept verbatim as parity
+references.
+
+The PR-4 solver-program refactor rewrote ``ddim``, ``explicit_adams``,
+``implicit_adams_pece``, and ``dpm_solver_pp2m`` from ``lax.fori_loop`` /
+eager bodies into single ``lax.scan`` programs with explicit donatable
+buffers.  These are the *original* loop bodies, copied unchanged, so
+``tests/test_solvers.py`` can assert the new scan programs are
+**bit-identical** to what shipped before.  ``era`` and the singlestep
+DPM-Solvers were not rewritten (era was already a scan; dpm_solver_2/fast
+stay unrolled), so their "legacy" entry is the registry function itself.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import get_solver
+from repro.core.adams import AM4, _ab_combine
+from repro.core.schedules import NoiseSchedule, timesteps
+from repro.core.solver_base import (
+    SolverConfig,
+    SolverOutput,
+    buffer_append,
+    buffer_init,
+    ddim_step,
+    trajectory_append,
+    trajectory_init,
+)
+
+Array = jax.Array
+
+
+def ddim_sample(eps_fn, x_init, schedule: NoiseSchedule, config: SolverConfig):
+    n = config.nfe
+    ts = timesteps(schedule, n, config.scheme, t_end=config.t_end)
+    traj = trajectory_init(x_init, n, config.return_trajectory)
+
+    def body(i, carry):
+        x, traj = carry
+        t_cur, t_next = ts[i], ts[i + 1]
+        eps = eps_fn(x, t_cur)
+        x = ddim_step(schedule, x, eps, t_cur, t_next)
+        traj = trajectory_append(traj, i + 1, x)
+        return (x, traj)
+
+    x, traj = jax.lax.fori_loop(0, n, body, (x_init, traj))
+    aux = {"trajectory": traj} if traj is not None else {}
+    return SolverOutput(x0=x, nfe=jnp.int32(n), aux=aux)
+
+
+def explicit_adams_sample(
+    eps_fn, x_init, schedule: NoiseSchedule, config: SolverConfig, order: int = 4
+):
+    n = config.nfe
+    ts = timesteps(schedule, n, config.scheme, t_end=config.t_end)
+    dt = config.solver_dtype
+
+    x = x_init.astype(dt)
+    eps_buf, t_buf = buffer_init(x, n + 1, dt)
+    e0 = eps_fn(x, ts[0]).astype(dt)
+    eps_buf, t_buf = buffer_append(eps_buf, t_buf, jnp.int32(0), e0, ts[0])
+    traj = trajectory_init(x, n, config.return_trajectory)
+
+    def body(i, carry):
+        x, eps_buf, t_buf, traj = carry
+        t_cur, t_next = ts[i], ts[i + 1]
+
+        branches = []
+        for o in range(1, order + 1):
+            branches.append(lambda _, o=o: _ab_combine(eps_buf, i, o))
+        eff = jnp.minimum(i + 1, order)
+        eps_c = jax.lax.switch(eff - 1, branches, None)
+
+        x_next = ddim_step(schedule, x, eps_c, t_cur, t_next)
+
+        def observe(_):
+            return eps_fn(x_next, t_next).astype(dt)
+
+        e_new = jax.lax.cond(
+            i + 1 < n, observe, lambda _: jnp.zeros_like(x_next), None
+        )
+        eps_buf2, t_buf2 = buffer_append(eps_buf, t_buf, i + 1, e_new, t_next)
+        traj = trajectory_append(traj, i + 1, x_next)
+        return (x_next, eps_buf2, t_buf2, traj)
+
+    x, eps_buf, t_buf, traj = jax.lax.fori_loop(
+        0, n, body, (x, eps_buf, t_buf, traj)
+    )
+    aux = {"trajectory": traj} if traj is not None else {}
+    return SolverOutput(x0=x.astype(x_init.dtype), nfe=jnp.int32(n), aux=aux)
+
+
+def implicit_adams_pece_sample(
+    eps_fn, x_init, schedule: NoiseSchedule, config: SolverConfig
+):
+    n_steps = max(config.nfe // 2, 1)
+    ts = timesteps(schedule, n_steps, config.scheme, t_end=config.t_end)
+    dt = config.solver_dtype
+
+    x = x_init.astype(dt)
+    eps_buf, t_buf = buffer_init(x, n_steps + 1, dt)
+    e0 = eps_fn(x, ts[0]).astype(dt)
+    eps_buf, t_buf = buffer_append(eps_buf, t_buf, jnp.int32(0), e0, ts[0])
+    traj = trajectory_init(x, n_steps, config.return_trajectory)
+
+    def body(i, carry):
+        x, eps_buf, t_buf, traj = carry
+        t_cur, t_next = ts[i], ts[i + 1]
+
+        branches = [
+            lambda _, o=o: _ab_combine(eps_buf, i, o) for o in (1, 2, 3, 4)
+        ]
+        eff = jnp.minimum(i + 1, 4)
+        eps_p = jax.lax.switch(eff - 1, branches, None)
+        x_pred = ddim_step(schedule, x, eps_p, t_cur, t_next)
+        e_bar = eps_fn(x_pred, t_next).astype(dt)
+        e_i = jax.lax.dynamic_index_in_dim(eps_buf, i, 0, keepdims=False)
+        e_im1 = jax.lax.dynamic_index_in_dim(
+            eps_buf, jnp.maximum(i - 1, 0), 0, keepdims=False
+        )
+        e_im2 = jax.lax.dynamic_index_in_dim(
+            eps_buf, jnp.maximum(i - 2, 0), 0, keepdims=False
+        )
+        c0, c1, c2, c3 = AM4
+        eps_c = c0 * e_bar + c1 * e_i + c2 * e_im1 + c3 * e_im2
+        eps_c = jnp.where(i >= 2, eps_c, 0.5 * (e_bar + e_i))
+        x_next = ddim_step(schedule, x, eps_c, t_cur, t_next)
+
+        def observe(_):
+            return eps_fn(x_next, t_next).astype(dt)
+
+        e_new = jax.lax.cond(
+            i + 1 < n_steps, observe, lambda _: jnp.zeros_like(x_next), None
+        )
+        eps_buf2, t_buf2 = buffer_append(eps_buf, t_buf, i + 1, e_new, t_next)
+        traj = trajectory_append(traj, i + 1, x_next)
+        return (x_next, eps_buf2, t_buf2, traj)
+
+    x, eps_buf, t_buf, traj = jax.lax.fori_loop(
+        0, n_steps, body, (x, eps_buf, t_buf, traj)
+    )
+    aux = {"trajectory": traj} if traj is not None else {}
+    return SolverOutput(
+        x0=x.astype(x_init.dtype), nfe=jnp.int32(2 * n_steps - 1), aux=aux
+    )
+
+
+def dpm_solver_pp2m_sample(
+    eps_fn, x_init, schedule: NoiseSchedule, config: SolverConfig
+):
+    n = config.nfe
+    ts = timesteps(schedule, n, "logsnr", t_end=config.t_end)
+    lam = schedule.lam(ts)
+    alpha, sigma = schedule.alpha(ts), schedule.sigma(ts)
+    dt = config.solver_dtype
+
+    x = x_init.astype(dt)
+
+    def x0_of(x, i):
+        e = eps_fn(x, ts[i]).astype(dt)
+        return (x - sigma[i].astype(dt) * e) / alpha[i].astype(dt)
+
+    def body(i, carry):
+        x, x0_prev = carry
+        x0 = x0_of(x, i)
+        h = lam[i + 1] - lam[i]
+        h_prev = lam[i] - lam[jnp.maximum(i - 1, 0)]
+        r = h_prev / h
+        use_ms = i > 0
+        coef = jnp.where(use_ms, 1.0 / (2.0 * jnp.where(use_ms, r, 1.0)), 0.0)
+        d = (1.0 + coef).astype(dt) * x0 - coef.astype(dt) * x0_prev
+        x_next = (sigma[i + 1] / sigma[i]).astype(dt) * x - (
+            alpha[i + 1] * jnp.expm1(-h)
+        ).astype(dt) * d
+        return (x_next, x0)
+
+    x, _ = jax.lax.fori_loop(0, n, body, (x, jnp.zeros_like(x)))
+    return SolverOutput(x0=x.astype(x_init.dtype), nfe=jnp.int32(n), aux={})
+
+
+_LEGACY = {
+    "ddim": ddim_sample,
+    "explicit_adams": explicit_adams_sample,
+    "implicit_adams_pece": implicit_adams_pece_sample,
+    "dpm_solver_pp2m": dpm_solver_pp2m_sample,
+}
+
+
+def legacy_sample(name: str, eps_fn, x_init, schedule, config) -> SolverOutput:
+    """The pre-refactor sampling entry for ``name`` (the current registry
+    function for solvers the refactor did not rewrite)."""
+    fn = _LEGACY.get(name)
+    if fn is None:
+        fn = get_solver(name)
+    return fn(eps_fn, x_init, schedule, config)

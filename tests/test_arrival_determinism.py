@@ -16,6 +16,11 @@ timing must never leak into results.  Randomized over seq_len / nfe / seeds
 / arrival delays via `tests/_hypothesis_compat.py` (real hypothesis in CI,
 the deterministic shim in bare environments), and re-checked on the
 8-virtual-device mesh fixture.
+
+PR-4 extends the wall to **mixed-solver streams**: requests routed to
+different registry solvers (`era` / `ddim` / `dpm_solver_pp2m`) interleave
+in one scheduler, batch per (solver, seq_len, nfe) queue, and every
+request's x0 still matches its sync-drain and solo runs bit-for-bit.
 """
 
 import random
@@ -38,10 +43,19 @@ from repro.serving import (
 # module-level: the shim's `given` produces zero-arg tests, so no fixtures
 ANALYTIC = AnalyticGaussian()
 
+# solvers a mixed stream cycles through (None = the engine default, era)
+MIXED_SOLVERS = (None, "ddim", "dpm_solver_pp2m", "era")
 
-def _requests(n, seq_len, nfe, seed0):
+
+def _requests(n, seq_len, nfe, seed0, mixed=False):
     return [
-        SampleRequest(batch=1, seq_len=seq_len, nfe=nfe, seed=seed0 + i)
+        SampleRequest(
+            batch=1,
+            seq_len=seq_len,
+            nfe=nfe,
+            solver=MIXED_SOLVERS[i % len(MIXED_SOLVERS)] if mixed else None,
+            seed=seed0 + i,
+        )
         for i in range(n)
     ]
 
@@ -134,6 +148,39 @@ def test_x0_bit_identical_across_sync_async_and_solo(
             solo[i],
             err_msg=f"async vs solo diverged for seed {r.seed} "
             f"(n={n}, seq_len={seq_len}, nfe={r.nfe})",
+        )
+
+
+@settings(max_examples=3, deadline=None)
+@given(
+    st.integers(min_value=3, max_value=6),       # co-arriving requests
+    st.integers(min_value=2, max_value=8),       # seq_len
+    st.integers(min_value=0, max_value=4),       # nfe headroom above k=4
+    st.integers(min_value=0, max_value=10_000),  # request seed base
+    st.integers(min_value=0, max_value=10_000),  # arrival-delay seed
+)
+def test_x0_bit_identical_for_mixed_solver_streams(
+    n, seq_len, extra, seed0, delay_seed
+):
+    """The same wall with requests routed to different solvers: the
+    scheduler batches per (solver, seq_len, nfe) queue, and no request's
+    result depends on which solvers its neighbours asked for."""
+    reqs = _requests(n, seq_len, nfe=5 + extra, seed0=seed0, mixed=True)
+    sync = _sync_x0(reqs)
+    asyn = _async_x0(reqs, delay_seed)
+    solo = _solo_x0(reqs)
+    for i, r in enumerate(reqs):
+        np.testing.assert_array_equal(
+            asyn[i],
+            sync[i],
+            err_msg=f"async vs sync diverged for solver {r.solver} "
+            f"seed {r.seed} (n={n}, seq_len={seq_len}, nfe={r.nfe})",
+        )
+        np.testing.assert_array_equal(
+            asyn[i],
+            solo[i],
+            err_msg=f"async vs solo diverged for solver {r.solver} "
+            f"seed {r.seed} (n={n}, seq_len={seq_len}, nfe={r.nfe})",
         )
 
 

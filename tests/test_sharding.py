@@ -150,6 +150,30 @@ def test_round_to_dp():
     assert round_to_dp(5, None) == 5
 
 
+def test_solver_program_carry_pspecs():
+    """PR-4: carry pspecs derive from the program's declared state — ERA's
+    per-sample ERS shards delta_eps with its rows, shared-delta ERA and
+    every baseline replicate it; the rest of the carry is the shared
+    batch-over-data-axes layout."""
+    from repro.core import ERAConfig, default_config, get_program
+    from repro.parallel.sharding import solver_carry_pspecs
+
+    mesh = FakeMesh({"data": 8})
+    era = get_program("era")
+    specs = solver_carry_pspecs(mesh, era, ERAConfig(per_sample=True), batch=16)
+    assert specs.delta_eps == P(("data",))
+    assert specs.eps_buf == P(None, ("data",), None, None)
+    specs = solver_carry_pspecs(mesh, era, ERAConfig(), batch=16)
+    assert specs.delta_eps == P()  # shared scalar delta replicates
+    for name in ("ddim", "explicit_adams", "dpm_solver_pp2m"):
+        program = get_program(name)
+        cfg = default_config(name)
+        assert not program.per_sample_state(cfg)
+        specs = program.carry_pspecs(cfg, mesh, batch=16)
+        assert specs.x == P(("data",), None, None)
+        assert specs.t_buf == P()
+
+
 def test_param_replicator_invalidates_on_leaf_change():
     """The placement cache keys on leaf identity, so mutating the params
     container in place (finetune-and-sample loop) gets fresh weights instead

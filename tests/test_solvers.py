@@ -1,5 +1,7 @@
 """Solver behaviour on the analytic diffusion (exact eps oracle) —
-convergence, budget accounting, and the paper's error-robustness claims."""
+convergence, budget accounting, the paper's error-robustness claims, and
+the cross-path parity wall: every registry solver's scan program is
+bit-identical to the pre-refactor eager sample (`tests/_legacy_solvers.py`)."""
 
 import dataclasses
 
@@ -8,9 +10,11 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+import _legacy_solvers
 from repro.core import (
     ERAConfig,
     default_config,
+    get_program,
     get_solver,
     solver_names,
 )
@@ -173,6 +177,92 @@ def test_per_sample_ers_isolates_batch_noise(analytic, xT, reference_x0):
     shared = clean_rmse(ERAConfig(nfe=15, k=5, lam=2.0, error_norm="mean"))
     per_sample = clean_rmse(ERAConfig(nfe=15, k=5, lam=2.0, per_sample=True))
     assert per_sample < shared * 0.5, (per_sample, shared)
+
+
+# ---------------------------------------------------------------------------
+# cross-path parity wall: the PR-4 scan programs vs the pre-refactor loops
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def toy_dlm():
+    """Seeded toy DiffusionLM denoiser (smoke config) — real learned-ish
+    eps with a transformer inside, so the parity wall covers the serving
+    model path, not just the analytic oracle."""
+    from repro.configs import get_config
+    from repro.models import build_model
+    from repro.models.diffusion import DiffusionLM
+
+    cfg = get_config("qwen2-1.5b", smoke=True)
+    dlm = DiffusionLM(build_model(cfg))
+    params = dlm.init(jax.random.PRNGKey(3))
+    return dlm.eps_fn(params), cfg.d_model
+
+
+@pytest.mark.parametrize("name", solver_names())
+def test_scan_program_bit_identical_to_legacy(name, analytic, xT):
+    """The rewritten single-scan programs (ddim / explicit_adams / PECE /
+    dpm++2m) reproduce the pre-refactor fori_loop samplers bit-for-bit;
+    unrewritten solvers (era, singlestep DPM) trivially match themselves."""
+    cfg = default_config(name, nfe=12)
+    new = get_solver(name)(analytic.eps, xT, analytic.schedule, cfg)
+    old = _legacy_solvers.legacy_sample(
+        name, analytic.eps, xT, analytic.schedule, cfg
+    )
+    np.testing.assert_array_equal(np.asarray(new.x0), np.asarray(old.x0))
+    assert int(new.nfe) == int(old.nfe)
+
+
+@pytest.mark.parametrize("name", solver_names())
+def test_scan_program_bit_identical_to_legacy_on_diffusion_lm(name, toy_dlm):
+    eps_fn, d_model = toy_dlm
+    from repro.core import linear_schedule
+
+    sched = linear_schedule()
+    cfg = default_config(name, nfe=6)
+    x = jax.random.normal(jax.random.PRNGKey(11), (2, 8, d_model), jnp.float32)
+    new = get_solver(name)(eps_fn, x, sched, cfg)
+    old = _legacy_solvers.legacy_sample(name, eps_fn, x, sched, cfg)
+    np.testing.assert_array_equal(np.asarray(new.x0), np.asarray(old.x0))
+
+
+@pytest.mark.parametrize(
+    "name", ["ddim", "explicit_adams", "implicit_adams_pece", "dpm_solver_pp2m"]
+)
+def test_rewritten_programs_match_legacy_under_jit(name, analytic, xT):
+    """The same parity inside an outer jit (the serving engine's shape):
+    buffers allocated outside, threaded through the program entry."""
+    program = get_program(name)
+    cfg = default_config(name, nfe=10)
+
+    @jax.jit
+    def run(x, *buffers):
+        return program.sample_scan(
+            analytic.eps, x, buffers, analytic.schedule, cfg
+        ).x0
+
+    buffers = program.alloc_buffers(xT, cfg)
+    new = run(xT, *buffers)
+    old = _legacy_solvers.legacy_sample(
+        name, analytic.eps, xT, analytic.schedule, cfg
+    )
+    np.testing.assert_allclose(
+        np.asarray(new), np.asarray(old.x0), atol=1e-6
+    )
+
+
+def test_rewritten_programs_trajectory_matches_x0(analytic, xT):
+    """The scan programs' optional trajectory recording ends at x0 and has
+    one entry per step plus the initial state."""
+    for name in ("ddim", "explicit_adams", "implicit_adams_pece"):
+        cfg = default_config(name, nfe=8, return_trajectory=True)
+        out = get_solver(name)(analytic.eps, xT, analytic.schedule, cfg)
+        steps = 4 if name == "implicit_adams_pece" else 8
+        traj = out.aux["trajectory"]
+        assert traj.shape == (steps + 1,) + xT.shape, name
+        np.testing.assert_allclose(
+            np.asarray(traj[-1]), np.asarray(out.x0), atol=1e-5
+        )
 
 
 def test_dpm_solver_pp2m_converges(analytic, xT, reference_x0):
