@@ -243,7 +243,12 @@ class ExplicitAdamsProgram(SolverProgram):
     def alloc_buffers(self, x_like, cfg, shardings=None):
         return alloc_buffers(x_like.astype(cfg.solver_dtype), cfg, shardings)
 
-    def sample_scan(self, eps_fn, x_init, buffers, schedule, cfg, shardings=None):
+    def sample_scan(
+        self, eps_fn, x_init, buffers, schedule, cfg, shardings=None,
+        lengths=None,
+    ):
+        # AB4's combine is elementwise over positions — no solver-side
+        # sequence reductions to mask under `lengths`.
         eps_buf, t_buf = buffers
         return explicit_adams_scan(
             eps_fn, x_init, eps_buf, t_buf, schedule, cfg, shardings=shardings
@@ -272,7 +277,12 @@ class ImplicitAdamsPECEProgram(SolverProgram):
             num_steps=pece_num_steps(cfg.nfe),
         )
 
-    def sample_scan(self, eps_fn, x_init, buffers, schedule, cfg, shardings=None):
+    def sample_scan(
+        self, eps_fn, x_init, buffers, schedule, cfg, shardings=None,
+        lengths=None,
+    ):
+        # PECE's predictor/corrector math is elementwise over positions —
+        # no solver-side sequence reductions to mask under `lengths`.
         eps_buf, t_buf = buffers
         return implicit_adams_pece_scan(
             eps_fn, x_init, eps_buf, t_buf, schedule, cfg, shardings=shardings

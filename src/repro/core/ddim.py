@@ -60,6 +60,12 @@ def sample(
 class DDIMProgram(SolverProgram):
     name = "ddim"
 
-    def sample_scan(self, eps_fn, x_init, buffers, schedule, cfg, shardings=None):
+    def sample_scan(
+        self, eps_fn, x_init, buffers, schedule, cfg, shardings=None,
+        lengths=None,
+    ):
+        # DDIM's update is elementwise over positions, so a right-padded
+        # batch needs no solver-side masking (`lengths` is the denoiser's
+        # concern); accepted for the uniform program surface.
         assert not buffers
         return sample_scan(eps_fn, x_init, schedule, cfg, shardings=shardings)

@@ -205,7 +205,12 @@ class DPMpp2MProgram(SolverProgram):
                 f"nfe={req.nfe}"
             )
 
-    def sample_scan(self, eps_fn, x_init, buffers, schedule, cfg, shardings=None):
+    def sample_scan(
+        self, eps_fn, x_init, buffers, schedule, cfg, shardings=None,
+        lengths=None,
+    ):
+        # DPM++(2M)'s multistep combine is elementwise over positions — no
+        # solver-side sequence reductions to mask under `lengths`.
         assert not buffers
         return sample_pp2m_scan(eps_fn, x_init, schedule, cfg, shardings=shardings)
 
@@ -222,7 +227,12 @@ class DPMSolverProgram(SolverProgram):
         self.name = name
         self._sample = functools.partial(sample, order=order, fast=fast)
 
-    def sample_scan(self, eps_fn, x_init, buffers, schedule, cfg, shardings=None):
+    def sample_scan(
+        self, eps_fn, x_init, buffers, schedule, cfg, shardings=None,
+        lengths=None,
+    ):
+        # singlestep DPM updates are elementwise over positions — no
+        # solver-side sequence reductions to mask under `lengths`.
         assert not buffers
         x = constrain_x(x_init, shardings)
         out = self._sample(eps_fn, x, schedule, cfg)

@@ -120,19 +120,55 @@ def _fused_ops():
     return _kops if _FUSED_OK[backend] else None
 
 
-def _delta_eps(e_obs: Array, e_pred: Array, mode: str) -> Array:
-    d = (e_obs - e_pred).astype(jnp.float32)
+def _seq_sq_sums(d: Array, valid: Array | None) -> Array:
+    """Per-row sum of squared entries, accumulated position-by-position.
+
+    The mixed-seq-len serving path right-pads samples from length L to a
+    seq bucket L' and must leave every valid row's delta_eps — and hence
+    its ERS Lagrange-basis selection — **bit-identical** to the exact-shape
+    run.  A plain ``jnp.sum`` over the padded layout cannot promise that:
+    XLA may re-associate a size-L' reduction differently from a size-L one
+    even when the extra entries are exact zeros.  So the reduction here is
+    (a) features first, at fixed per-position shape, then (b) a strictly
+    sequential ``lax.scan`` over positions — appending zero-masked pad
+    positions only appends ``acc + 0.0`` steps, which are exact no-ops.
+    The accumulation is elementwise per row, so a batch-sharded run stays
+    collective-free.  Rank-2 inputs (no sequence axis) keep the plain
+    squared norm.
+    """
+    d = d.astype(jnp.float32)
+    if d.ndim < 3:
+        return jnp.sum(d.reshape(d.shape[0], -1) ** 2, axis=-1)
+    p = jnp.sum(d.reshape(d.shape[0], d.shape[1], -1) ** 2, axis=-1)  # (B, S)
+    if valid is not None:
+        p = jnp.where(valid, p, 0.0)
+    total, _ = jax.lax.scan(
+        lambda acc, ps: (acc + ps, None),
+        jnp.zeros(d.shape[0], jnp.float32),
+        p.T,
+    )
+    return total
+
+
+def _delta_eps(
+    e_obs: Array, e_pred: Array, mode: str, valid: Array | None = None
+) -> Array:
     if mode == "global":
-        return jnp.linalg.norm(d.reshape(-1))
+        d = (e_obs - e_pred).astype(jnp.float32)
+        if valid is None:
+            return jnp.linalg.norm(d.reshape(-1))
+        # masked Eq. 15: pad positions contribute exactly zero
+        return jnp.sqrt(jnp.sum(_seq_sq_sums(d, valid)))
     if mode == "mean":  # per-sample L2, averaged — batch-size invariant
-        return jnp.mean(jnp.sqrt(jnp.sum(d.reshape(d.shape[0], -1) ** 2, -1)))
+        return jnp.mean(_delta_eps_batch(e_obs, e_pred, valid))
     raise ValueError(f"unknown error_norm {mode!r}")
 
 
-def _delta_eps_batch(e_obs: Array, e_pred: Array) -> Array:
-    """Per-sample L2 errors, (B,)."""
-    d = (e_obs - e_pred).astype(jnp.float32)
-    return jnp.sqrt(jnp.sum(d.reshape(d.shape[0], -1) ** 2, -1))
+def _delta_eps_batch(
+    e_obs: Array, e_pred: Array, valid: Array | None = None
+) -> Array:
+    """Per-sample L2 errors, (B,), reduced only over valid positions."""
+    return jnp.sqrt(_seq_sq_sums(e_obs - e_pred, valid))
 
 
 def era_combine(
@@ -189,11 +225,20 @@ def sample_scan(
     shardings=None,      # optional carry placement, duck-typed with fields
                          # .x/.eps_buf/.t_buf/.delta_eps (NamedShardings) —
                          # see parallel.sharding.sampler_shardings
+    lengths: Array | None = None,  # (B,) valid seq lengths of a right-
+                                   # padded mixed-seq-len batch; masks the
+                                   # ERS error norms so pad positions can
+                                   # never flip a basis selection
 ) -> SolverOutput:
     n = config.nfe
     k = config.k
     if n < k:
         raise ValueError(f"ERA-Solver needs nfe >= k ({n} < {k})")
+    if lengths is not None and x_init.ndim < 3:
+        raise ValueError(
+            "lengths masking needs batch-of-sequences latents (B, S, ...); "
+            f"got x of rank {x_init.ndim}"
+        )
     if eps_buf.shape != (n + 1,) + x_init.shape:
         raise ValueError(
             f"eps buffer shape {eps_buf.shape} != {(n + 1,) + x_init.shape}"
@@ -204,6 +249,11 @@ def sample_scan(
     dt = config.solver_dtype
     kops = _fused_ops() if config.use_fused_update else None
     am4 = jnp.asarray(AM4, jnp.float32)
+    valid = (
+        None
+        if lengths is None
+        else jnp.arange(x_init.shape[1], dtype=jnp.int32) < lengths[:, None]
+    )  # (B, S) position-validity mask for the error norms
 
     x = x_init.astype(dt)
     if shardings is not None:
@@ -224,11 +274,16 @@ def sample_scan(
             delta_eps, shardings.delta_eps
         )
 
+    # ERS selections are emitted per step (warmup steps emit the zero
+    # placeholder) so callers can assert two runs selected identical bases
+    tau_shape = (x.shape[0], k) if config.per_sample else (k,)
+
     def warm_branch(ops):
         x, eps_buf, t_buf, de, i, t_cur, t_next = ops
         e_cur = jax.lax.dynamic_index_in_dim(eps_buf, i, 0, keepdims=False)
         x_next = ddim_step(schedule, x, e_cur, t_cur, t_next)
-        return x_next, e_cur  # prediction placeholder: the DDIM-held noise
+        # prediction placeholder: the DDIM-held noise; no selection yet
+        return x_next, e_cur, jnp.zeros(tau_shape, jnp.int32)
 
     def main_branch(ops):
         x, eps_buf, t_buf, de, i, t_cur, t_next = ops
@@ -263,12 +318,12 @@ def sample_scan(
                         xb, es, tn, eh, t_next, cx, ce, am4
                     )
                 )(x, eps_sel, t_sel, e_hist_b)
-                return x_next, eps_bar
+                return x_next, eps_bar, tau
             eps_bar, eps_corr = jax.vmap(
                 era_combine, in_axes=(0, 0, 0, None)
             )(eps_sel, t_sel, e_hist_b, t_next)
             x_next = ddim_step(schedule, x, eps_corr, t_cur, t_next)
-            return x_next, eps_bar
+            return x_next, eps_bar, tau
         tau = lagrange.select_bases(
             i, k, de, config.lam, config.selection, config.const_power
         )
@@ -281,25 +336,27 @@ def sample_scan(
             x_next, eps_bar = kops.era_step(
                 x, eps_sel, t_sel, e_hist, t_next, cx, ce, am4
             )
-            return x_next, eps_bar
+            return x_next, eps_bar, tau
         eps_bar, eps_corr = era_combine(eps_sel, t_sel, e_hist, t_next)
         x_next = ddim_step(schedule, x, eps_corr, t_cur, t_next)
-        return x_next, eps_bar
+        return x_next, eps_bar, tau
 
     def step(carry, inp):
         x, eps_buf, t_buf, de = carry
         i, t_cur, t_next = inp
         ops = (x, eps_buf, t_buf, de, i, t_cur, t_next)
-        x_next, eps_bar = jax.lax.cond(i < k - 1, warm_branch, main_branch, ops)
+        x_next, eps_bar, tau = jax.lax.cond(
+            i < k - 1, warm_branch, main_branch, ops
+        )
 
         # Observe eps at the new point — except on the final step, whose
         # x_next is the output (keeps total cost at exactly `nfe` evals).
         def observe(_):
             e_new = eps_fn(x_next, t_next).astype(dt)
             if config.per_sample:
-                de_new = _delta_eps_batch(e_new, eps_bar)
+                de_new = _delta_eps_batch(e_new, eps_bar, valid)
             else:
-                de_new = _delta_eps(e_new, eps_bar, config.error_norm)
+                de_new = _delta_eps(e_new, eps_bar, config.error_norm, valid)
             return e_new, de_new
 
         def skip(_):
@@ -312,15 +369,18 @@ def sample_scan(
         traj_x = x_next if config.return_trajectory else None
         # per-sample: emit the raw (B,) errors and reduce after the scan, so
         # a batch-sharded run keeps the loop body free of collectives
-        return (x_next, eps_buf, t_buf, de), (de, traj_x)
+        return (x_next, eps_buf, t_buf, de), (de, tau, traj_x)
 
-    (x, eps_buf, t_buf, delta_eps), (de_hist, traj_tail) = jax.lax.scan(
-        step, (x, eps_buf, t_buf, delta_eps), step_grid(ts)
+    (x, eps_buf, t_buf, delta_eps), (de_hist, tau_hist, traj_tail) = (
+        jax.lax.scan(step, (x, eps_buf, t_buf, delta_eps), step_grid(ts))
     )
     aux: dict[str, Any] = {}
     if config.per_sample:
         aux["delta_eps_history_per_sample"] = de_hist        # (nfe, B)
         aux["delta_eps_history"] = jnp.mean(de_hist, axis=-1)
+        # per-row selected Lagrange bases per step — the engine's padding-
+        # invariance wall asserts these match the exact-shape run exactly
+        aux["ers_selection_history"] = tau_hist              # (nfe, B, k)
     else:
         aux["delta_eps_history"] = de_hist
     if config.return_trajectory:
@@ -341,7 +401,11 @@ class ERAProgram(SolverProgram):
 
     name = "era"
     config_cls = ERAConfig
-    aux_row_axes = {"trajectory": 1, "delta_eps_history_per_sample": 1}
+    aux_row_axes = {
+        "trajectory": 1,
+        "delta_eps_history_per_sample": 1,
+        "ers_selection_history": 1,
+    }
 
     def engine_config(self) -> ERAConfig:
         # per-sample ERS isolates co-batched requests from each other
@@ -352,6 +416,13 @@ class ERAProgram(SolverProgram):
 
     def per_sample_state(self, cfg: ERAConfig) -> bool:
         return cfg.per_sample
+
+    def supports_lengths(self, cfg: ERAConfig) -> bool:
+        """ERA's only cross-position math is the ERS error norm, which
+        ``sample_scan`` masks (position-sequential accumulation, so padded
+        and exact-shape runs agree bitwise); everything else — Lagrange
+        predictor, AM4 corrector, DDIM update — is elementwise."""
+        return True
 
     def validate(self, req, cfg: ERAConfig, dp: int = 1) -> None:
         super().validate(req, cfg, dp=dp)
@@ -374,14 +445,20 @@ class ERAProgram(SolverProgram):
         if cfg.use_fused_update:
             _fused_ops()
 
-    def sample_scan(self, eps_fn, x_init, buffers, schedule, cfg, shardings=None):
+    def sample_scan(
+        self, eps_fn, x_init, buffers, schedule, cfg, shardings=None,
+        lengths=None,
+    ):
         eps_buf, t_buf = buffers
         return sample_scan(
-            eps_fn, x_init, eps_buf, t_buf, schedule, cfg, shardings=shardings
+            eps_fn, x_init, eps_buf, t_buf, schedule, cfg,
+            shardings=shardings, lengths=lengths,
         )
 
-    def scope_aux(self, aux: dict, off: int, batch: int) -> dict:
-        scoped = super().scope_aux(aux, off, batch)
+    def scope_aux(
+        self, aux: dict, off: int, batch: int, seq_len: int | None = None
+    ) -> dict:
+        scoped = super().scope_aux(aux, off, batch, seq_len=seq_len)
         if scoped is not aux and "delta_eps_history_per_sample" in scoped:
             # the batch-mean diagnostic must cover only this request's rows
             # (pad rows would dilute it; batch-mates would leak into it)

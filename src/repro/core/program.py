@@ -25,10 +25,19 @@ solver-specific branches:
   (batch, nfe) requests are legal (ERA's ``nfe >= k``, PECE's 2-NFE/step
   budget, DPM++(2M)'s multistep warmup).  ``req`` is duck-typed (needs
   ``.batch`` and ``.nfe``) so core stays import-free of the serving layer.
-* ``scope_aux(aux, off, batch)`` + ``aux_row_axes`` — aux-scoping
-  metadata: which diagnostics carry a padded-batch axis, so a co-batched
-  request sees only its own rows (no batch-mate/tenant or pad-row
-  leakage).
+* ``scope_aux(aux, off, batch, seq_len=...)`` + ``aux_row_axes`` /
+  ``aux_seq_axes`` — aux-scoping metadata: which diagnostics carry a
+  padded-batch axis and which carry a padded-sequence axis, so a
+  co-batched request sees only its own rows and valid positions (no
+  batch-mate/tenant, pad-row, or pad-position leakage).
+* ``supports_lengths(cfg)`` + the ``lengths`` argument of ``sample_scan``
+  — the length-mask channel for mixed-seq-len fusion: the serving engine
+  right-pads each request's sample from its ``seq_len`` to a shared seq
+  bucket and passes the per-row valid lengths through the compiled
+  program.  A program that supports lengths guarantees pad positions can
+  never change a valid position's math (elementwise solvers get this for
+  free; ERA masks its ERS error norms so a pad token can never flip a
+  Lagrange-basis selection).
 * ``pre_compile(cfg)`` — eager hook consulted before a caller jits the
   program (ERA uses it to run the fused-kernel parity probe, which cannot
   execute inside a jit trace).
@@ -60,6 +69,8 @@ class SolverProgram:
     config_cls: type[SolverConfig] = SolverConfig
     #: aux keys whose value carries the padded batch on the given axis
     aux_row_axes: Mapping[str, int] = {"trajectory": 1}
+    #: aux keys whose value carries the padded sequence on the given axis
+    aux_seq_axes: Mapping[str, int] = {"trajectory": 2}
 
     # ---- configs ---------------------------------------------------------
     def default_config(self, **kw) -> SolverConfig:
@@ -82,6 +93,19 @@ class SolverProgram:
         """Does the scan carry per-sample ``(B,)``-shaped solver state that
         should shard with its rows (ERA's per-sample delta_eps)?"""
         return False
+
+    def supports_lengths(self, cfg: SolverConfig) -> bool:
+        """Can this program run a right-padded mixed-seq-len batch with a
+        per-row ``lengths`` vector such that every valid position's math is
+        exactly what an unpadded run would compute?
+
+        True is correct whenever the solver's own math is elementwise over
+        positions (DDIM / Adams / DPM updates touch each position
+        independently, so a pad position can never leak into a valid one —
+        the *denoiser* mask is the engine's responsibility).  A program
+        whose per-step math reduces over the sequence (ERA's ERS error
+        norm) must mask that reduction to return True."""
+        return True
 
     def validate(self, req: Any, cfg: SolverConfig, dp: int = 1) -> None:
         """Reject an illegal request at submit time.  ``req`` needs
@@ -141,9 +165,16 @@ class SolverProgram:
         schedule: NoiseSchedule,
         cfg: SolverConfig,
         shardings=None,
+        lengths: Array | None = None,
     ) -> SolverOutput:
         """The solver loop as one XLA program, with ``buffers`` threaded in
-        explicitly so a jitting caller can donate them."""
+        explicitly so a jitting caller can donate them.
+
+        ``lengths`` is the mixed-seq-len mask channel: a per-row ``(B,)``
+        int32 vector of valid sequence lengths for a right-padded batch
+        (None = every position valid).  Programs whose math is elementwise
+        over positions may ignore it; programs with sequence reductions
+        must mask them (see :meth:`supports_lengths`)."""
         raise NotImplementedError
 
     def sample(
@@ -160,18 +191,37 @@ class SolverProgram:
         )
 
     # ---- aux scoping -----------------------------------------------------
-    def scope_aux(self, aux: dict, off: int, batch: int) -> dict:
+    def scope_aux(
+        self, aux: dict, off: int, batch: int, seq_len: int | None = None
+    ) -> dict:
         """Scope solver diagnostics to one request's rows inside a fused
-        padded batch, per :attr:`aux_row_axes`.  A co-batched request must
-        see only its own rows — not its batch-mates' (tenant isolation) and
-        not the pad rows."""
-        hit = {k: ax for k, ax in self.aux_row_axes.items() if aux.get(k) is not None}
-        if not hit:
+        padded batch, per :attr:`aux_row_axes` — and, for a seq-bucketed
+        batch, to the request's valid positions per :attr:`aux_seq_axes`
+        (``seq_len`` = the request's unpadded length; None = the batch ran
+        at the request's exact shape).  A co-batched request must see only
+        its own rows and positions — not its batch-mates' (tenant
+        isolation), not the pad rows, and not the pad positions."""
+        row_hit = {
+            k: ax for k, ax in self.aux_row_axes.items()
+            if aux.get(k) is not None
+        }
+        seq_hit = (
+            {}
+            if seq_len is None
+            else {
+                k: ax for k, ax in self.aux_seq_axes.items()
+                if aux.get(k) is not None
+            }
+        )
+        if not row_hit and not seq_hit:
             return aux
         scoped = dict(aux)
-        for key, axis in hit.items():
+        for key, axis in row_hit.items():
             idx = (slice(None),) * axis + (slice(off, off + batch),)
-            scoped[key] = aux[key][idx]
+            scoped[key] = scoped[key][idx]
+        for key, axis in seq_hit.items():
+            idx = (slice(None),) * axis + (slice(0, seq_len),)
+            scoped[key] = scoped[key][idx]
         return scoped
 
 

@@ -53,26 +53,45 @@ def run_continuous(dlm, params, args) -> None:
 
     With ``--mix solver_a,solver_b,...`` the stream cycles requests through
     several registry solvers — each request routes to its own solver's
-    program inside one engine (per-(solver, seq_len, nfe) fuse queues)."""
+    program inside one engine (per-(solver, seq, nfe) fuse queues).  With
+    ``--seq-buckets`` + ``--seq-mix-lens``, requests of different lengths
+    fuse into shared length-masked batches (see docs/serving.md)."""
     mix = [s.strip() for s in args.mix.split(",")] if args.mix else [args.solver]
+    seq_buckets = (
+        tuple(int(x) for x in args.seq_buckets.split(","))
+        if args.seq_buckets
+        else None
+    )
+    lens = (
+        [int(x) for x in args.seq_mix_lens.split(",")]
+        if args.seq_mix_lens
+        else [args.seq]
+    )
     engine = BatchedSampler(
         dlm,
         linear_schedule(),
         args.solver,
         _solver_config(args, per_sample=True),
         batch_buckets=(1, 8, 64),
+        seq_buckets=seq_buckets,
     )
-    # compile every (solver, bucket) program before the timed stream
+    # compile every (solver, batch bucket, seq group) program before the
+    # timed stream — one warmup drain per distinct seq group so lone
+    # requests at any length hit a warm program
+    seq_groups = sorted({engine.executor.group_key(
+        SampleRequest(batch=1, seq_len=ln, nfe=args.nfe)
+    )[1] for ln in lens})
     for solver in mix:
         for bucket in engine.batch_buckets:
-            for i in range(bucket):
-                engine.submit(
-                    SampleRequest(
-                        batch=1, seq_len=args.seq, nfe=args.nfe,
-                        solver=solver, seed=10_000 + i,
+            for seq in seq_groups:
+                for i in range(bucket):
+                    engine.submit(
+                        SampleRequest(
+                            batch=1, seq_len=seq, nfe=args.nfe,
+                            solver=solver, seed=10_000 + i,
+                        )
                     )
-                )
-            engine.drain(params)
+                engine.drain(params)
 
     policy = SchedulerPolicy(
         max_wait_ms=args.max_wait_ms, target_occupancy=args.occupancy
@@ -86,7 +105,7 @@ def run_continuous(dlm, params, args) -> None:
             lambda i: futures.append(
                 sched.submit(
                     SampleRequest(
-                        batch=1, seq_len=args.seq, nfe=args.nfe,
+                        batch=1, seq_len=lens[i % len(lens)], nfe=args.nfe,
                         solver=mix[i % len(mix)], seed=args.seed + i,
                     )
                 )
@@ -138,6 +157,18 @@ def main() -> None:
         "'era,ddim,dpm_solver_pp2m'",
     )
     ap.add_argument("--rate", type=float, default=20.0, help="arrivals/s")
+    ap.add_argument(
+        "--seq-buckets",
+        default=None,
+        help="comma-separated seq-bucket ladder for the --continuous "
+        "engine (mixed-seq-len fusion with padding masks), e.g. '32,64'",
+    )
+    ap.add_argument(
+        "--seq-mix-lens",
+        default=None,
+        help="comma-separated seq_lens the --continuous stream cycles "
+        "through (default: --seq only)",
+    )
     ap.add_argument("--max-wait-ms", type=float, default=25.0)
     ap.add_argument(
         "--occupancy", type=float, default=1.0,

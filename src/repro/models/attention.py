@@ -30,6 +30,16 @@ NEG_INF = -1e30
 # ---------------------------------------------------------------------------
 
 
+def _kv_mask_bias(kv_mask: Array) -> Array:
+    """(B, Sk) per-row key-validity mask -> additive bias.
+
+    Valid keys get an exact ``0.0`` bias (``score + 0.0 == score``
+    bitwise), so a right-padded batch's valid positions score exactly what
+    the unpadded batch would.
+    """
+    return jnp.where(kv_mask, 0.0, NEG_INF).astype(jnp.float32)
+
+
 def _mask_bias(
     q_pos: Array, kv_pos: Array, window: int, causal: bool, protected: int = 0
 ) -> Array:
@@ -58,7 +68,10 @@ def _softcap(x: Array, cap: float) -> Array:
 # ---------------------------------------------------------------------------
 
 
-def _naive_sdpa(q, k, v, q_pos, kv_pos, *, window, causal, softcap, protected=0):
+def _naive_sdpa(
+    q, k, v, q_pos, kv_pos, *, window, causal, softcap, protected=0,
+    kv_mask=None,
+):
     b, sq, h, hd = q.shape
     kv = k.shape[2]
     g = h // kv
@@ -66,12 +79,17 @@ def _naive_sdpa(q, k, v, q_pos, kv_pos, *, window, causal, softcap, protected=0)
     scores = jnp.einsum("bqkgd,bskd->bkgqs", qg, k).astype(jnp.float32)
     scores = _softcap(scores * (hd**-0.5), softcap)
     scores = scores + _mask_bias(q_pos, kv_pos, window, causal, protected)
+    if kv_mask is not None:  # per-row pad-key mask (mixed-seq-len batches)
+        scores = scores + _kv_mask_bias(kv_mask)[:, None, None, None, :]
     w = jax.nn.softmax(scores, axis=-1)
     out = jnp.einsum("bkgqs,bskd->bqkgd", w.astype(v.dtype), v)
     return out.reshape(b, sq, h, hd)
 
 
-def _chunked_sdpa(q, k, v, q_pos, kv_pos, *, window, causal, softcap, chunk, protected=0):
+def _chunked_sdpa(
+    q, k, v, q_pos, kv_pos, *, window, causal, softcap, chunk, protected=0,
+    kv_mask=None,
+):
     """Streaming-softmax attention, scanned over KV chunks."""
     b, sq, h, hd = q.shape
     sk, kv = k.shape[1], k.shape[2]
@@ -82,9 +100,16 @@ def _chunked_sdpa(q, k, v, q_pos, kv_pos, *, window, causal, softcap, chunk, pro
         k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
         v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
         kv_pos = jnp.pad(kv_pos, (0, pad), constant_values=-1)
+        if kv_mask is not None:
+            kv_mask = jnp.pad(kv_mask, ((0, 0), (0, pad)))
     kc = k.reshape(b, nchunks, chunk, kv, hd).transpose(1, 0, 2, 3, 4)
     vc = v.reshape(b, nchunks, chunk, kv, hd).transpose(1, 0, 2, 3, 4)
     pc = kv_pos.reshape(nchunks, chunk)
+    mc = (
+        None
+        if kv_mask is None
+        else kv_mask.reshape(b, nchunks, chunk).transpose(1, 0, 2)
+    )
 
     qg = (q * (hd**-0.5)).reshape(b, sq, kv, g, hd)
     acc0 = jnp.zeros((b, sq, kv, g, hd), jnp.float32)
@@ -93,11 +118,16 @@ def _chunked_sdpa(q, k, v, q_pos, kv_pos, *, window, causal, softcap, chunk, pro
 
     def body(carry, xs):
         acc, m, l = carry
-        kj, vj, pj = xs
+        if mc is None:
+            kj, vj, pj = xs
+        else:
+            kj, vj, pj, mj = xs
         s = jnp.einsum("bqkgd,bskd->bqkgs", qg, kj).astype(jnp.float32)
         s = _softcap(s, softcap)
         bias = _mask_bias(q_pos, pj, window, causal, protected)  # (sq, chunk)
         s = s + bias[None, :, None, None, :]
+        if mc is not None:  # per-row pad-key mask (mixed-seq-len batches)
+            s = s + _kv_mask_bias(mj)[:, None, None, None, :]
         m_new = jnp.maximum(m, jnp.max(s, axis=-1))
         p = jnp.exp(s - m_new[..., None])
         scale = jnp.exp(m - m_new)
@@ -107,7 +137,8 @@ def _chunked_sdpa(q, k, v, q_pos, kv_pos, *, window, causal, softcap, chunk, pro
         l = l * scale + jnp.sum(p, axis=-1)
         return (acc, m_new, l), None
 
-    (acc, m, l), _ = jax.lax.scan(body, (acc0, m0, l0), (kc, vc, pc))
+    xs = (kc, vc, pc) if mc is None else (kc, vc, pc, mc)
+    (acc, m, l), _ = jax.lax.scan(body, (acc0, m0, l0), xs)
     out = acc / jnp.maximum(l[..., None], 1e-30)
     return out.reshape(b, sq, h, hd).astype(q.dtype)
 
@@ -176,10 +207,17 @@ def sdpa(
     impl: str = "auto",
     chunk: int = 1024,
     protected: int = 0,
+    kv_mask: Array | None = None,
 ) -> Array:
+    """``kv_mask`` is an optional (B, Sk) per-row key-validity mask — the
+    mixed-seq-len serving path marks right-padding pad positions invalid so
+    they get zero attention weight.  Masked calls route through the naive /
+    chunked paths (the banded fast path assumes an aligned full-sequence
+    layout, and the Pallas flash kernel has no per-row mask operand)."""
     sq, sk = q.shape[1], k.shape[1]
     if (
-        impl in ("auto", "chunked", "banded")
+        kv_mask is None
+        and impl in ("auto", "chunked", "banded")
         and causal
         and window > 0
         and sq == sk
@@ -189,18 +227,24 @@ def sdpa(
             q, k, v, q_pos, kv_pos,
             window=window, softcap=softcap, chunk=chunk, protected=protected,
         )
+    if impl in ("pallas", "banded") and kv_mask is not None:
+        # the flash kernel carries no per-row mask operand, and the banded
+        # path assumes an aligned unmasked full-sequence layout
+        impl = "chunked"
     if impl == "auto":
         impl = "naive" if sq * sk <= 1024 * 2048 else "chunked"
     if impl == "naive":
         return _naive_sdpa(
             q, k, v, q_pos, kv_pos,
             window=window, causal=causal, softcap=softcap, protected=protected,
+            kv_mask=kv_mask,
         )
     if impl == "chunked":
         return _chunked_sdpa(
             q, k, v, q_pos, kv_pos,
             window=window, causal=causal, softcap=softcap,
             chunk=min(chunk, max(sk, 128)), protected=protected,
+            kv_mask=kv_mask,
         )
     if impl == "pallas":
         from repro.kernels import ops as kops
@@ -388,8 +432,14 @@ def attention(
     causal: bool = True,
     cross_kv: tuple[Array, Array] | None = None,
     protected: int = 0,
+    lengths: Array | None = None,
 ) -> tuple[Array, dict | None]:
-    """mode: 'train' | 'prefill' | 'decode'. Returns (out, new_cache)."""
+    """mode: 'train' | 'prefill' | 'decode'. Returns (out, new_cache).
+
+    ``lengths`` ((B,) int32, train-mode full-sequence layout only) marks
+    positions >= lengths[b] as right-padding: those keys are masked out of
+    every row's softmax, so a padded batch's valid positions attend to
+    exactly the keys an unpadded batch would."""
     b, s, d = x.shape
     h, kvh, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
 
@@ -436,11 +486,16 @@ def attention(
     else:
         if mode == "prefill" and cache is not None:
             new_cache = cache_fill(cache, k, v, jnp.int32(0))
+        kv_mask = (
+            None
+            if lengths is None
+            else jnp.arange(s, dtype=jnp.int32) < lengths[:, None]
+        )
         out = sdpa(
             q, k, v, positions, positions,
             window=window, causal=causal, softcap=cfg.attn_logit_softcap,
             impl=_resolve_impl(cfg, s, s), chunk=cfg.attn_chunk,
-            protected=protected,
+            protected=protected, kv_mask=kv_mask,
         )
 
     return L.linear(p["wo"], out.reshape(b, s, h * hd)), new_cache

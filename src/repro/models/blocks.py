@@ -35,6 +35,9 @@ class BlockCtx:
     window_override: int = -1      # -1: use block default; 0: full; >0: window
     protected: int = 0             # cache slots never evicted (meta tokens)
     enc_out: Any = None            # whisper encoder states (B, F, d)
+    lengths: Any = None            # (B,) valid seq lengths of a right-padded
+                                   # batch (diffusion-LM mixed-seq-len path);
+                                   # attention blocks mask pad keys
 
 
 def zero_aux() -> dict:
@@ -65,7 +68,7 @@ def dense_apply(p, x, cache, ctx: BlockCtx, cfg):
         p["attn"], h, cfg,
         mode=ctx.mode, cache=cache, pos=ctx.pos,
         window=_window(cfg, ctx, cfg.sliding_window),
-        protected=ctx.protected, causal=ctx.causal,
+        protected=ctx.protected, causal=ctx.causal, lengths=ctx.lengths,
     )
     x = x + attn_out
     h = L.rmsnorm(p["ln2"], x, cfg.norm_eps)
@@ -88,7 +91,7 @@ def moe_apply(p, x, cache, ctx: BlockCtx, cfg):
         p["attn"], h, cfg,
         mode=ctx.mode, cache=cache, pos=ctx.pos,
         window=_window(cfg, ctx, cfg.sliding_window),
-        protected=ctx.protected, causal=ctx.causal,
+        protected=ctx.protected, causal=ctx.causal, lengths=ctx.lengths,
     )
     x = x + attn_out
     h = L.rmsnorm(p["ln2"], x, cfg.norm_eps)
@@ -206,7 +209,8 @@ def enc_specs(cfg) -> dict:
 def enc_apply(p, x, cache, ctx: BlockCtx, cfg):
     h = L.layernorm(p["ln1"], x, cfg.norm_eps)
     attn_out, _ = A.attention(
-        p["attn"], h, cfg, mode="train", cache=None, causal=False
+        p["attn"], h, cfg, mode="train", cache=None, causal=False,
+        lengths=ctx.lengths,
     )
     x = x + attn_out
     h = L.layernorm(p["ln2"], x, cfg.norm_eps)

@@ -22,6 +22,13 @@ from repro.models.model import Model
 
 Array = jax.Array
 
+#: block kinds whose only cross-position mixing is attention, which the
+#: denoiser can mask exactly for right-padded mixed-seq-len batches.  SSM /
+#: recurrent kinds (mamba, mlstm, slstm, hymba_*) mix positions through a
+#: directional state scan, and MLA has its own unmasked attention path —
+#: stacks containing those serve exact-shape instead of seq-bucketed.
+MASKABLE_BLOCKS = frozenset({"dense", "moe", "enc"})
+
 
 def diffusion_specs(model: Model) -> dict:
     d = model.config.d_model
@@ -51,26 +58,51 @@ class DiffusionLM:
     def init_abstract(self) -> dict:
         return L.abstract_params(self.specs(), self.config.param_dtype)
 
-    def eps(self, params: dict, x_t: Array, t: Array) -> Array:
-        """Noise prediction eps_theta(x_t, t). x_t: (B, S, d); t scalar."""
+    @property
+    def supports_length_masking(self) -> bool:
+        """Can this denoiser run right-padded mixed-seq-len batches such
+        that every valid position's output is exactly the unpadded run's?
+        True iff every block's cross-position mixing is maskable attention
+        (:data:`MASKABLE_BLOCKS`).  The serving engine consults this before
+        seq-bucketing and falls back to exact-shape grouping otherwise."""
+        return all(kind in MASKABLE_BLOCKS for kind, _ in self.config.blocks)
+
+    def eps(
+        self, params: dict, x_t: Array, t: Array,
+        lengths: Array | None = None,
+    ) -> Array:
+        """Noise prediction eps_theta(x_t, t). x_t: (B, S, d); t scalar.
+
+        ``lengths`` ((B,) int32) marks per-row right-padding: pad keys are
+        masked out of every attention softmax (valid positions see exactly
+        the unpadded batch's math) and the returned eps is zeroed at pad
+        positions, so a padded row's tail stays inert and bounded across a
+        whole sampling run instead of evolving garbage."""
         cfg = self.config
         tcond = L.time_mlp(params["time_mlp"], jnp.atleast_1d(t))  # (1, d)
         h = L.linear(params["in_proj"], x_t.astype(cfg.dtype))
         h = h + tcond[:, None, :].astype(h.dtype)
         h, _ = self.model.backbone(
-            params["backbone"], h, mode="train", causal=self.causal
+            params["backbone"], h, mode="train", causal=self.causal,
+            lengths=lengths,
         )
         eps = h @ params["eps_head"]["w"].astype(h.dtype) + params["eps_head"][
             "b"
         ].astype(h.dtype)
         # zero-init head -> identity-ish residual from x_t at step 0
-        return (eps.astype(jnp.float32) + x_t.astype(jnp.float32)).astype(
+        out = (eps.astype(jnp.float32) + x_t.astype(jnp.float32)).astype(
             x_t.dtype
         )
+        if lengths is not None:
+            valid = jnp.arange(out.shape[1], dtype=jnp.int32) < lengths[:, None]
+            out = jnp.where(valid[..., None], out, 0.0)
+        return out
 
-    def eps_fn(self, params: dict):
-        """Closure matching the solver API: eps_fn(x, t) -> eps."""
-        return lambda x, t: self.eps(params, x, t)
+    def eps_fn(self, params: dict, lengths: Array | None = None):
+        """Closure matching the solver API: eps_fn(x, t) -> eps.  With
+        ``lengths``, the closure denoises a right-padded batch with pad
+        positions masked (see :meth:`eps`)."""
+        return lambda x, t: self.eps(params, x, t, lengths=lengths)
 
     def loss(
         self, params: dict, batch: dict, rng: jax.Array, schedule: NoiseSchedule

@@ -314,12 +314,20 @@ class Model:
         return _lm_logits(params, h, self.config), cache
 
     # ---- diffusion-LM denoiser hook (see repro/models/diffusion.py) ----
-    def backbone(self, params, h: Array, mode: str = "train", causal: bool = True):
+    def backbone(
+        self, params, h: Array, mode: str = "train", causal: bool = True,
+        lengths: Array | None = None,
+    ):
         """Run the block stack on externally-embedded states (B,S,d) —
         the diffusion-LM denoiser path.  No token prefix is present, so
-        meta-token protection is off; enc-dec stacks run decoder-only."""
+        meta-token protection is off; enc-dec stacks run decoder-only.
+
+        ``lengths`` ((B,) int32) marks per-row right-padding for
+        mixed-seq-len batches: attention blocks mask pad keys out of every
+        softmax.  Only meaningful for stacks whose cross-position mixing is
+        attention (see ``repro.models.diffusion.MASKABLE_BLOCKS``)."""
         cfg = self.config
-        ctx = BlockCtx(mode=mode, causal=causal, protected=0)
+        ctx = BlockCtx(mode=mode, causal=causal, protected=0, lengths=lengths)
         h, _, aux = _stack(params, h, None, ctx, cfg)
         norm = L.layernorm if cfg.family == "audio" else L.rmsnorm
         return norm(params["final_norm"], h, cfg.norm_eps), aux

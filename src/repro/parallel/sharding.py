@@ -63,15 +63,18 @@ class SamplerSpecs(NamedTuple):
     ``(cap, B, ...)`` — batch is axis 1, like KV caches — and replicated
     ``t_buf`` time grid (ERA / Adams-family history buffers), and the
     per-sample solver state ``delta_eps`` ((B,) for per-sample ERS, scalar
-    otherwise).  Programs read the fields their carry uses and ignore the
-    rest (DDIM touches only ``x``; DPM++(2M)'s ``x0_prev`` shards like
-    ``x``).
+    otherwise).  ``lengths`` places the mixed-seq-len path's per-row (B,)
+    valid-length vector batch-aligned with its rows, so the masked error
+    norms stay shard-local.  Programs read the fields their carry uses and
+    ignore the rest (DDIM touches only ``x``; DPM++(2M)'s ``x0_prev``
+    shards like ``x``).
     """
 
     x: P
     eps_buf: P
     t_buf: P
     delta_eps: P
+    lengths: P
 
 
 class SamplerShardings(NamedTuple):
@@ -81,6 +84,7 @@ class SamplerShardings(NamedTuple):
     eps_buf: NamedSharding
     t_buf: NamedSharding
     delta_eps: NamedSharding
+    lengths: NamedSharding
 
 
 def sampler_pspecs(
@@ -109,6 +113,7 @@ def sampler_pspecs(
         eps_buf=P(None, dp, *rest),
         t_buf=P(),
         delta_eps=P(dp) if per_sample else P(),
+        lengths=P(dp),
     )
 
 

@@ -78,7 +78,19 @@ def fused_path_ok() -> bool:
 
 
 class BatchedSampler:
-    """Request-batching diffusion sampling engine (submit/drain)."""
+    """Request-batching diffusion sampling engine (submit/drain).
+
+    Thread-safety: ``submit`` / ``submit_with_future`` / ``future`` /
+    ``pending`` may be called from any thread; concurrent ``drain()``
+    callers are safe (each drains whatever is pending when it takes the
+    queue, and chunk execution serializes inside the shared executor).
+    ``drain()`` blocks until every chunk it took has finished on device.
+
+    ``seq_buckets`` opts into mixed-seq-len fusion (see
+    :class:`~repro.serving.executor.FusedExecutor`): requests whose
+    ``seq_len`` differs fuse into one compiled batch, right-padded and
+    length-masked, with exact-shape fallback when masking is unsupported.
+    """
 
     def __init__(
         self,
@@ -88,9 +100,11 @@ class BatchedSampler:
         solver_config: SolverConfig | None = None,
         batch_buckets: tuple[int, ...] | None = (1, 8, 64),
         mesh: Mesh | None = None,
+        seq_buckets: tuple[int, ...] | None = None,
     ):
         self.executor = FusedExecutor(
-            dlm, schedule, solver, solver_config, batch_buckets, mesh
+            dlm, schedule, solver, solver_config, batch_buckets, mesh,
+            seq_buckets=seq_buckets,
         )
         self._queue_lock = threading.Lock()
         self._pending: list[QueueItem] = []
@@ -125,6 +139,10 @@ class BatchedSampler:
     @property
     def batch_buckets(self) -> tuple[int, ...] | None:
         return self.executor.batch_buckets
+
+    @property
+    def seq_buckets(self) -> tuple[int, ...] | None:
+        return self.executor.seq_buckets
 
     # ---- request queue -------------------------------------------------
     def submit(self, req: SampleRequest) -> int:
@@ -172,8 +190,9 @@ class BatchedSampler:
             return len(self._pending)
 
     def drain(self, params) -> dict[int, SampleResult]:
-        """Run all pending requests, fused per (solver, seq_len, nfe)
-        bucket.
+        """Run all pending requests, fused per (solver, seq, nfe) group
+        (seq = seq bucket under mixed-seq-len fusion, exact seq_len
+        otherwise).
 
         Also resolves each drained ticket's Future, so a drain from one
         thread delivers results to submitters waiting on other threads.
@@ -184,13 +203,14 @@ class BatchedSampler:
         """
         with self._queue_lock:
             pending, self._pending = self._pending, []
-        # only same-(solver, seq_len, nfe) requests can fuse into one
-        # compiled bucket — mixed-solver traffic batches per solver
+        # only same-group-key requests can fuse into one compiled bucket:
+        # (solver, seq, nfe), where seq is the seq *bucket* when the engine
+        # does mixed-seq-len fusion and the exact seq_len otherwise —
+        # mixed-solver traffic batches per solver either way
         groups: dict[tuple[str, int, int], list[QueueItem]] = {}
         for item in pending:
             _, req, _ = item
-            key = (self.executor.resolve_solver(req), req.seq_len, req.nfe)
-            groups.setdefault(key, []).append(item)
+            groups.setdefault(self.executor.group_key(req), []).append(item)
 
         results: dict[int, SampleResult] = {}
         failure: Exception | None = None
@@ -224,7 +244,27 @@ class BatchedSampler:
 
 
 class SamplerService:
-    """One-call facade over :class:`BatchedSampler` (exact-size buckets)."""
+    """One-call facade over :class:`BatchedSampler` (exact-size buckets).
+
+    ``sample()`` is synchronous and blocking: it submits, drains, and
+    returns the finished ``(x0, info)``.  It is thread-safe (the underlying
+    engine is), but callers wanting concurrency should use
+    :class:`BatchedSampler` or the async scheduler directly — the facade
+    runs one exact-size batch per call and never fuses strangers.
+
+    Info-dict keys returned alongside ``x0``:
+
+    * ``wall_s`` — wall time of the fused batch this request rode in;
+    * ``latency_s`` — submit→result wall time for this request;
+    * ``padded_batch`` — batch size the compiled program ran at (== the
+      request's ``batch`` here, since the facade uses exact-size buckets);
+    * ``padded_seq_len`` — sequence length the compiled program ran at
+      (== the request's ``seq_len`` here; a seq bucket when a bucketed
+      engine serves the request);
+    * plus every solver diagnostic from ``SampleResult.aux``
+      (``delta_eps_history``, ``ers_selection_history``, ...), scoped to
+      this request.
+    """
 
     def __init__(
         self,
@@ -255,6 +295,7 @@ class SamplerService:
             "wall_s": res.batch_wall_s,
             "latency_s": res.latency_s,
             "padded_batch": res.padded_batch,
+            "padded_seq_len": res.padded_seq_len,
             **res.aux,
         }
 

@@ -21,6 +21,27 @@ requests batched per solver (the jit cache and the scheduler's fuse queues
 key on ``(solver, seq_len, nfe)``, so mixed traffic never cross-contaminates
 a bucket).
 
+**Seq-len bucketing** (``seq_buckets=(64, 128, ...)``): requests whose
+``seq_len`` differ can fuse into one compiled batch.  Each request's rows
+are right-padded on the host from their exact length to the smallest bucket
+that fits, a per-row ``lengths`` vector rides through the compiled program,
+the denoiser masks pad keys out of every attention softmax
+(``DiffusionLM.eps(lengths=...)``), and length-aware solver programs mask
+their own sequence reductions (ERA's ERS error norms, which accumulate
+positions sequentially so padding cannot re-associate them).  Padded runs
+are therefore *mathematically* identical to exact-shape runs everywhere,
+and **bit-identical** wherever the denoiser itself adds no
+padded-length reductions — positionwise denoisers (the property walls),
+and in practice the attention stacks on the CPU test shapes; the
+guaranteed bar for attention denoisers is the 1e-6 parity wall, since XLA
+may re-associate a softmax reduction over a padded key axis.
+The group key then carries the *bucketed* length, bounding the compile
+count by the bucket ladder rather than by distinct seq_lens.  Bucketing
+silently falls back to exact-shape grouping per solver when masking can't
+be guaranteed: non-fusable configs (exact-size runs can't pad), programs
+that don't support lengths, or denoisers whose block stack isn't maskable
+(``DiffusionLM.supports_length_masking``).
+
 All mutable state (jit cache, shardings cache, param replication cache) is
 guarded by one re-entrant lock, and chunk execution itself is serialized
 under the same lock — concurrent ``drain()`` callers and the scheduler
@@ -55,6 +76,23 @@ Array = jax.Array
 
 @dataclasses.dataclass(frozen=True)
 class SampleRequest:
+    """One sampling request, as submitted to any serving entry point.
+
+    Immutable and hashable — safe to share across threads, reuse for
+    resubmission, and use in test fixtures.  Requests are validated at
+    ``submit()`` (never at drain time): unknown ``solver`` names, per-solver
+    ``(batch, nfe)`` constraints, and — when the engine has seq buckets —
+    ``seq_len`` above the largest bucket are all rejected there, so an
+    invalid request can never poison a fused batch for its co-batched
+    neighbours.
+
+    ``seed`` fully determines the request's initial noise: ``x_T`` is drawn
+    as ``jax.random.normal(PRNGKey(seed), (batch, seq_len, d_model))``
+    regardless of which fused batch, seq bucket, or mesh the request lands
+    in — this is what the arrival-determinism and padding-invariance walls
+    pin down.
+    """
+
     batch: int
     seq_len: int
     nfe: int = 10
@@ -66,15 +104,28 @@ class SampleRequest:
 
 @dataclasses.dataclass
 class SampleResult:
-    """Per-request output of a drained batch."""
+    """Per-request output of a drained batch.
+
+    Delivered through the request's Future by whichever thread drained the
+    fused batch.  ``x0`` and every ``aux`` entry are scoped to this
+    request alone: its own rows (no batch-mates, no pad rows) and — under
+    seq bucketing — its own ``seq_len`` positions (no pad positions).
+    ``batch_wall_s`` / ``padded_batch`` / ``padded_seq_len`` describe the
+    fused batch the request rode in and are shared by its batch-mates;
+    ``latency_s`` is this request's own submit→result wall time.  These
+    are also the keys surfaced in ``SamplerService.sample``'s info dict.
+    """
 
     x0: Array                # (batch, seq_len, d_model)
     aux: dict[str, Any]      # solver diagnostics, scoped to this request's
                              # rows (per-sample histories / trajectories
-                             # exclude batch-mates and pad rows)
+                             # exclude batch-mates and pad rows) and valid
+                             # positions (trajectories exclude pad tail)
     latency_s: float         # submit -> result wall time
     batch_wall_s: float      # wall time of the fused batch this rode in
-    padded_batch: int        # bucket size the batch ran at
+    padded_batch: int        # batch bucket size the batch ran at
+    padded_seq_len: int      # seq length the batch ran at (== seq bucket
+                             # under seq bucketing, else the exact seq_len)
 
 
 # A queued request: (ticket, request, submit-time).  Both the sync engine's
@@ -101,7 +152,20 @@ def resolve_future(fut: Future, result=None, exception=None) -> None:
 
 
 class FusedExecutor:
-    """Fused-chunk runner shared by the sync drain path and the scheduler."""
+    """Fused-chunk runner shared by the sync drain path and the scheduler.
+
+    Thread-safety contract: every public method may be called from any
+    thread.  Reads of the jit / shardings / replication caches and chunk
+    execution itself serialize under one re-entrant lock, so sync
+    ``drain()`` callers and the scheduler's drain thread share compiled
+    buckets without double-compiling or interleaving donated-buffer
+    executions; ``run_chunk`` blocks for the whole fused execution
+    (device-synchronous — it calls ``block_until_ready``).
+
+    ``seq_buckets`` (e.g. ``(64, 128, 256, 512)``) opts into mixed-seq-len
+    fusion: see the module docstring for the masking contract and the
+    exact-shape fallbacks.  ``None`` (default) groups by exact ``seq_len``.
+    """
 
     def __init__(
         self,
@@ -111,6 +175,7 @@ class FusedExecutor:
         solver_config: SolverConfig | None = None,
         batch_buckets: tuple[int, ...] | None = (1, 8, 64),
         mesh: Mesh | None = None,
+        seq_buckets: tuple[int, ...] | None = None,
     ):
         self.dlm = dlm
         self.schedule = schedule
@@ -131,6 +196,9 @@ class FusedExecutor:
             # buckets round up to dp multiples (1/8/64 on dp=8 -> 8/64)
             batch_buckets = sorted({round_to_dp(b, mesh) for b in batch_buckets})
         self.batch_buckets = tuple(batch_buckets) if batch_buckets else None
+        self.seq_buckets = tuple(sorted(seq_buckets)) if seq_buckets else None
+        # per-solver verdict: may this solver's traffic seq-bucket at all?
+        self._seq_masked: dict[str, bool] = {}
         self._jitted: dict[Any, Any] = {}
         self._shardings_cache: dict[Any, Any] = {}
         self._replicate = ParamReplicator(mesh) if mesh is not None else None
@@ -170,6 +238,56 @@ class FusedExecutor:
     def max_bucket(self) -> int | None:
         return self.batch_buckets[-1] if self.batch_buckets else None
 
+    # ---- seq-len bucketing ----------------------------------------------
+    def seq_masked(self, solver: str | None) -> bool:
+        """Does this solver's traffic fuse across seq_lens (padded +
+        length-masked), or fall back to exact-shape grouping?
+
+        Requires *every* layer of the masking contract: an engine bucket
+        ladder, a fusable config (exact-size runs cannot pad), a program
+        that guarantees pad positions never leak into valid ones
+        (``SolverProgram.supports_lengths``), and a denoiser whose block
+        stack can be masked exactly
+        (``DiffusionLM.supports_length_masking``)."""
+        if not self.seq_buckets:
+            return False
+        name = solver or self.solver_name
+        verdict = self._seq_masked.get(name)
+        if verdict is None:
+            program = self.program_for(name)
+            cfg = self.config_for(name)
+            verdict = self._seq_masked[name] = (
+                program.fusable(cfg)
+                and program.supports_lengths(cfg)
+                and bool(getattr(self.dlm, "supports_length_masking", False))
+            )
+        return verdict
+
+    def bucket_seq(self, n: int) -> int:
+        """Smallest seq bucket >= n (requests above the ladder are rejected
+        at submit, so this never falls off the end)."""
+        for s in self.seq_buckets:
+            if n <= s:
+                return s
+        raise ValueError(
+            f"seq_len {n} exceeds the largest seq bucket "
+            f"{self.seq_buckets[-1]}"
+        )
+
+    def group_key(self, req: SampleRequest) -> tuple[str, int, int]:
+        """The fuse-group key ``(solver, seq, nfe)`` — what the sync
+        drain's groups, the scheduler's queues, and the jit cache batch by.
+        Under seq bucketing ``seq`` is the request's seq *bucket*, so
+        mixed-length traffic shares a group and the compile count is
+        bounded by the ladder; otherwise it is the exact ``seq_len``."""
+        solver = self.resolve_solver(req)
+        seq = (
+            self.bucket_seq(req.seq_len)
+            if self.seq_masked(solver)
+            else req.seq_len
+        )
+        return (solver, seq, req.nfe)
+
     def validate(self, req: SampleRequest) -> None:
         """Reject an invalid request at submit time, not drain time — a bad
         request must not poison the queue for its co-batched neighbours.
@@ -177,6 +295,17 @@ class FusedExecutor:
         live in each program's ``validate``."""
         if req.batch < 1:
             raise ValueError(f"batch must be >= 1, got {req.batch}")
+        if req.seq_len < 1:
+            raise ValueError(f"seq_len must be >= 1, got {req.seq_len}")
+        if self.seq_buckets and req.seq_len > self.seq_buckets[-1]:
+            # the bucket ladder is the engine's serving contract: an
+            # over-long request would need its own compiled shape, which is
+            # exactly the fragmentation bucketing exists to prevent
+            raise ValueError(
+                f"seq_len {req.seq_len} exceeds the largest seq bucket "
+                f"{self.seq_buckets[-1]}; extend seq_buckets or submit "
+                f"requests within the ladder"
+            )
         program = self.program_for(req.solver)  # unknown solver raises here
         program.validate(req, self.config_for(req.solver), dp=self.dp)
 
@@ -238,10 +367,12 @@ class FusedExecutor:
         pad: bool = True,
     ) -> None:
         """Run one chunk as a single fused program; fill ``results`` by
-        ticket.  All requests in a chunk share one solver (the queues and
-        drain groups key on it).  Serialized under the executor lock — safe
+        ticket.  All requests in a chunk share one group key (the queues
+        and drain groups key on it): one solver, and one seq length —
+        exact, or the shared seq bucket ``seq_len`` each request's rows are
+        right-padded up to.  Serialized under the executor lock — safe
         to call from the scheduler thread and sync drain() callers
-        concurrently."""
+        concurrently; blocks until the fused result is on host."""
         with self._lock:
             self._run_chunk_locked(params, seq_len, nfe, chunk, results, pad)
 
@@ -249,6 +380,7 @@ class FusedExecutor:
         d = self.dlm.config.d_model
         solver = self.resolve_solver(chunk[0][1])
         program = self.program_for(solver)
+        masked = self.seq_masked(solver)
         total = sum(req.batch for _, req, _ in chunk)
         padded = self.bucket_batch(total) if pad else total
         # assemble the batch on the host: eager jnp.concatenate would XLA-
@@ -257,51 +389,91 @@ class FusedExecutor:
         # composition — 40-90ms of compile against a ~10ms solver run.
         # Per-request noise stays jax.random (seed-deterministic across
         # batch compositions); numpy does the composition-shaped work.
-        parts = [
-            np.asarray(
+        # Seq bucketing: each request's noise is drawn at its *exact*
+        # (batch, seq_len, d) shape — identical to its solo run — and
+        # right-padded with zero rows up to the chunk's seq bucket.
+        parts = []
+        row_lengths: list[int] = []
+        for _, req, _ in chunk:
+            noise = np.asarray(
                 jax.random.normal(
                     jax.random.PRNGKey(req.seed),
-                    (req.batch, seq_len, d),
+                    (req.batch, req.seq_len, d),
                     jnp.float32,
                 )
             )
-            for _, req, _ in chunk
-        ]
+            if req.seq_len < seq_len:
+                noise = np.concatenate(
+                    [
+                        noise,
+                        np.zeros(
+                            (req.batch, seq_len - req.seq_len, d), np.float32
+                        ),
+                    ],
+                    axis=1,
+                )
+            parts.append(noise)
+            row_lengths += [req.seq_len] * req.batch
         if padded > total:
             parts.append(np.zeros((padded - total, seq_len, d), np.float32))
+            # pad rows are fully "valid": their lanes run ordinary (masked)
+            # math on zeros and are sliced away, never a 0-length edge case
+            row_lengths += [seq_len] * (padded - total)
         x_init = jnp.asarray(np.concatenate(parts, axis=0))
+        lengths = (
+            jnp.asarray(np.asarray(row_lengths, np.int32)) if masked else None
+        )
 
         cfg = dataclasses.replace(self.config_for(solver), nfe=nfe)
         shardings = self._shardings(program, cfg, padded)
         if shardings is not None:
             x_init = jax.device_put(x_init, shardings.x)
+            if lengths is not None:
+                lengths = jax.device_put(lengths, shardings.lengths)
             params = self._replicate(params)
-        run = self._runner(solver, cfg, padded, seq_len)
+        run = self._runner(solver, cfg, padded, seq_len, masked)
         t0 = time.perf_counter()
         buffers = program.alloc_buffers(x_init, cfg, shardings)
-        x0, aux = run(params, x_init, *buffers)
+        x0, aux = run(params, x_init, lengths, *buffers)
         x0 = jax.block_until_ready(x0)
         wall = time.perf_counter() - t0
 
         done = time.perf_counter()
         off = 0
         for ticket, req, t_submit in chunk:
+            x0_req = x0[off : off + req.batch]
+            scope_seq = None
+            if masked and req.seq_len < seq_len:
+                x0_req = x0_req[:, : req.seq_len]
+                scope_seq = req.seq_len
             results[ticket] = SampleResult(
-                x0=x0[off : off + req.batch],
-                aux=program.scope_aux(aux, off, req.batch),
+                x0=x0_req,
+                aux=program.scope_aux(
+                    aux, off, req.batch, seq_len=scope_seq
+                ),
                 latency_s=done - t_submit,
                 batch_wall_s=wall,
                 padded_batch=padded,
+                padded_seq_len=seq_len,
             )
             off += req.batch
 
-    def _runner(self, solver: str, cfg: SolverConfig, batch: int, seq_len: int):
+    def _runner(
+        self, solver: str, cfg: SolverConfig, batch: int, seq_len: int,
+        masked: bool = False,
+    ):
         """One jitted program per (solver, config, padded-batch, seq_len)
-        bucket.
+        bucket — with ``seq_len`` a ladder bucket under seq bucketing, so
+        the cache size is bounded by the ladder, not by distinct request
+        lengths.  The per-row ``lengths`` vector is a runtime *argument* of
+        the compiled program (None on unmasked buckets), so any mix of
+        request lengths reuses one executable.
 
         Mesh-aware: the key carries the data-parallel size so an engine
-        rebuilt on a different mesh never aliases a cached program."""
-        key = (solver, cfg, batch, seq_len, self.dp)
+        rebuilt on a different mesh never aliases a cached program; it also
+        carries ``masked`` so an exact-shape group never aliases a masked
+        program of the same shape."""
+        key = (solver, cfg, batch, seq_len, self.dp, masked)
         if key not in self._jitted:
             program = self.program_for(solver)
             shardings = self._shardings(program, cfg, batch)
@@ -309,22 +481,29 @@ class FusedExecutor:
             # trace below (ERA's fused-kernel parity gate)
             program.pre_compile(cfg)
 
-            def run(params, x_init, *buffers):
+            def run(params, x_init, lengths, *buffers):
+                eps_fn = (
+                    self.dlm.eps_fn(params)
+                    if lengths is None
+                    else self.dlm.eps_fn(params, lengths=lengths)
+                )
                 out = program.sample_scan(
-                    self.dlm.eps_fn(params),
+                    eps_fn,
                     x_init,
                     buffers,
                     self.schedule,
                     cfg,
                     shardings=shardings,
+                    lengths=lengths,
                 )
                 return out.x0, out.aux
 
             # donate x + the program's history buffers so XLA reuses them
-            # in place (CPU ignores donation and would warn, so gate it)
+            # in place (CPU ignores donation and would warn, so gate it);
+            # arg 2 (lengths) is never donated
             nbuf = program.num_buffers(cfg)
             donate = (
-                tuple(range(1, 2 + nbuf))
+                (1,) + tuple(range(3, 3 + nbuf))
                 if jax.default_backend() != "cpu"
                 else ()
             )

@@ -9,10 +9,13 @@ the standard continuous-batching shape for fixed-cost (known-NFE) solvers:
 * ``submit()`` is callable from any thread and returns a
   :class:`concurrent.futures.Future` that resolves to a
   :class:`~repro.serving.executor.SampleResult`;
-* requests land in per-(solver, seq_len, nfe) queues (only same-shape
-  requests routed to the same solver program can fuse into one compiled
-  bucket — a mixed ``era`` / ``ddim`` / ... stream batches per solver
-  instead of cross-contaminating a bucket);
+* requests land in per-(solver, seq, nfe) queues — the executor's group
+  key, where ``seq`` is the request's seq *bucket* when the engine does
+  mixed-seq-len fusion and the exact ``seq_len`` otherwise.  Only
+  same-group requests can fuse into one compiled bucket: a mixed ``era`` /
+  ``ddim`` / ... stream batches per solver instead of cross-contaminating
+  a bucket, while (under seq bucketing) requests of *different* lengths
+  share a queue, a batch, and a compiled program;
 * a background drain thread launches a queue when it reaches the policy's
   target bucket occupancy, or when its oldest request has waited
   ``max_wait_ms`` (deadline promotion — a lone request can never starve);
@@ -112,6 +115,15 @@ class AsyncBatchedSampler:
     time through the engine's shared
     :class:`~repro.serving.executor.FusedExecutor`.
 
+    Thread-safety and blocking behavior: ``submit`` / ``pending`` /
+    ``stats`` are non-blocking and callable from any thread (results are
+    delivered through futures); execution happens on the drain thread, or
+    on the caller's thread for explicit ``drain_once()`` pumping.  Sharing
+    the engine between this scheduler and sync ``drain()`` callers is safe
+    — both serialize in the executor and share its compile cache.
+    ``stop()`` blocks: it flushes every queued request (all futures
+    resolve) and joins the drain thread; schedulers are one-shot.
+
     ``params`` is bound at construction: the drain thread launches batches
     on its own schedule, so it must not depend on caller state at drain
     time.
@@ -129,8 +141,9 @@ class AsyncBatchedSampler:
         self.policy = policy or SchedulerPolicy()
         self._clock = clock
         self._cv = threading.Condition()
-        # fuse queues keyed (solver, seq_len, nfe): only same-solver,
-        # same-shape requests may share a compiled bucket
+        # fuse queues keyed by the executor's group key (solver, seq, nfe):
+        # only requests that may share a compiled bucket share a queue (seq
+        # is the seq bucket under mixed-seq-len fusion, else exact seq_len)
         self._queues: dict[
             tuple[str, int, int], deque[tuple[QueueItem, Future]]
         ] = {}
@@ -144,8 +157,14 @@ class AsyncBatchedSampler:
 
     # ---- client surface -------------------------------------------------
     def submit(self, req: SampleRequest) -> Future:
-        """Enqueue from any thread; the Future resolves to a SampleResult
-        (or raises, if the fused launch it rode in failed)."""
+        """Enqueue from any thread; never blocks on execution (the drain
+        thread runs batches).  The returned Future resolves to a
+        :class:`~repro.serving.executor.SampleResult` (or raises, if the
+        fused launch it rode in failed); ``Future.result(timeout=...)`` is
+        the blocking wait.  Invalid requests — unknown solver, per-solver
+        (batch, nfe) constraints, seq_len above the engine's largest seq
+        bucket — raise here, at submit, so they can never poison a fused
+        batch.  Raises RuntimeError after ``stop()``."""
         self.engine.executor.validate(req)
         fut: Future = Future()
         with self._cv:
@@ -154,11 +173,7 @@ class AsyncBatchedSampler:
             ticket = self._next_ticket
             self._next_ticket += 1
             item: QueueItem = (ticket, req, self._clock())
-            key = (
-                self.engine.executor.resolve_solver(req),
-                req.seq_len,
-                req.nfe,
-            )
+            key = self.engine.executor.group_key(req)
             self._queues.setdefault(key, deque()).append((item, fut))
             self._cv.notify()
         return fut

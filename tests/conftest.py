@@ -45,15 +45,21 @@ class AnalyticGaussian:
 
 class OracleDenoiser:
     """DiffusionLM-shaped wrapper around the analytic eps oracle, so engine
-    tests are exact and fast (no network params)."""
+    tests are exact and fast (no network params).
+
+    The oracle is positionwise (no cross-position mixing at all), so
+    length masking is trivially supported: pad positions cannot influence
+    valid ones, and the solver-side masked ERS norms do the rest.  The
+    ``lengths`` argument is therefore accepted and ignored."""
 
     D_MODEL = 8
+    supports_length_masking = True
 
     def __init__(self, analytic):
         self.analytic = analytic
         self.config = types.SimpleNamespace(d_model=self.D_MODEL)
 
-    def eps_fn(self, params):
+    def eps_fn(self, params, lengths=None):
         return self.analytic.eps
 
 

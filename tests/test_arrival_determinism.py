@@ -21,6 +21,12 @@ PR-4 extends the wall to **mixed-solver streams**: requests routed to
 different registry solvers (`era` / `ddim` / `dpm_solver_pp2m`) interleave
 in one scheduler, batch per (solver, seq_len, nfe) queue, and every
 request's x0 still matches its sync-drain and solo runs bit-for-bit.
+
+PR-5 extends it to **mixed-seq-len streams**: with `seq_buckets` the
+scheduler queues key on the seq *bucket*, so requests of different lengths
+share fused batches (right-padded + length-masked), and every request's x0
+still matches its exact-shape solo run bit-for-bit under any arrival
+interleaving (see also `tests/test_seq_bucketing.py`).
 """
 
 import random
@@ -60,19 +66,20 @@ def _requests(n, seq_len, nfe, seed0, mixed=False):
     ]
 
 
-def _sync_x0(reqs, mesh=None):
+def _sync_x0(reqs, mesh=None, seq_buckets=None):
     engine = BatchedSampler(
         OracleDenoiser(ANALYTIC),
         ANALYTIC.schedule,
         batch_buckets=(2, 4, 8),
         mesh=mesh,
+        seq_buckets=seq_buckets,
     )
     tickets = [engine.submit(r) for r in reqs]
     results = engine.drain(params=None)
     return [np.asarray(results[t].x0) for t in tickets]
 
 
-def _async_x0(reqs, delay_seed, mesh=None):
+def _async_x0(reqs, delay_seed, mesh=None, seq_buckets=None):
     """Run through the scheduler with racing client threads and randomized
     submission delays — arbitrary arrival interleavings and batch
     compositions."""
@@ -81,6 +88,7 @@ def _async_x0(reqs, delay_seed, mesh=None):
         ANALYTIC.schedule,
         batch_buckets=(2, 4, 8),
         mesh=mesh,
+        seq_buckets=seq_buckets,
     )
     rng = random.Random(delay_seed)
     futures: dict[int, object] = {}
@@ -181,6 +189,51 @@ def test_x0_bit_identical_for_mixed_solver_streams(
             solo[i],
             err_msg=f"async vs solo diverged for solver {r.solver} "
             f"seed {r.seed} (n={n}, seq_len={seq_len}, nfe={r.nfe})",
+        )
+
+
+@settings(max_examples=3, deadline=None)
+@given(
+    st.integers(min_value=3, max_value=6),       # co-arriving requests
+    st.integers(min_value=1, max_value=8),       # first request's seq_len
+    st.integers(min_value=0, max_value=4),       # nfe headroom above k=4
+    st.integers(min_value=0, max_value=10_000),  # request seed base
+    st.integers(min_value=0, max_value=10_000),  # arrival-delay seed
+)
+def test_x0_bit_identical_for_mixed_seq_len_streams(
+    n, seq0, extra, seed0, delay_seed
+):
+    """The same wall with requests of *different* seq_lens fusing into one
+    seq-bucketed batch: the scheduler queues key on the bucket, so any
+    arrival interleaving can mix lengths in a chunk — and no request's x0
+    may depend on which lengths its batch-mates brought, nor on how far it
+    was padded."""
+    nfe = 5 + extra
+    buckets = (4, 8)
+    reqs = [
+        SampleRequest(
+            batch=1,
+            seq_len=(seq0 + 3 * i) % 8 + 1,
+            nfe=nfe,
+            seed=seed0 + i,
+        )
+        for i in range(n)
+    ]
+    sync = _sync_x0(reqs, seq_buckets=buckets)
+    asyn = _async_x0(reqs, delay_seed, seq_buckets=buckets)
+    solo = _solo_x0(reqs)  # exact-shape, no bucketing anywhere
+    for i, r in enumerate(reqs):
+        np.testing.assert_array_equal(
+            asyn[i],
+            sync[i],
+            err_msg=f"async vs sync diverged for seq_len {r.seq_len} "
+            f"seed {r.seed} (n={n}, nfe={r.nfe})",
+        )
+        np.testing.assert_array_equal(
+            asyn[i],
+            solo[i],
+            err_msg=f"bucketed async vs exact-shape solo diverged for "
+            f"seq_len {r.seq_len} seed {r.seed} (n={n}, nfe={r.nfe})",
         )
 
 

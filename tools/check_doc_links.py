@@ -1,0 +1,79 @@
+"""Docs link checker: fail on dead relative links in README.md and docs/.
+
+CI runs this (see .github/workflows/ci.yml, lint job) so the docs book can
+cross-reference files — other docs pages, source modules, benchmarks —
+without links rotting as the tree is refactored.
+
+Checked: inline markdown links/images ``[text](target)`` whose target is
+relative (no scheme, no leading ``#``).  A ``path#anchor`` target checks
+the path.  External (``http(s)://``, ``mailto:``) and pure in-page anchor
+links are skipped.  Link targets are resolved against the linking file's
+directory and must exist inside the repo.
+
+Usage: ``python tools/check_doc_links.py [root]`` (default: repo root).
+Exits non-zero listing every dead link.
+"""
+
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+# inline links and images; [text](target "title") titles are stripped
+LINK_RE = re.compile(r"!?\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+SKIP_PREFIXES = ("http://", "https://", "mailto:", "#")
+
+
+def doc_files(root: Path) -> list[Path]:
+    files = [root / "README.md"]
+    files += sorted((root / "docs").glob("**/*.md"))
+    return [f for f in files if f.exists()]
+
+
+def dead_links(root: Path) -> list[str]:
+    failures = []
+    for md in doc_files(root):
+        text = md.read_text(encoding="utf-8")
+        for match in LINK_RE.finditer(text):
+            target = match.group(1)
+            if target.startswith(SKIP_PREFIXES):
+                continue
+            path = target.split("#", 1)[0]
+            if not path:  # pure in-page anchor
+                continue
+            # root-relative targets (GitHub-style /docs/x.md) resolve
+            # against the repo root, others against the linking file
+            base = root if path.startswith("/") else md.parent
+            resolved = (base / path.lstrip("/")).resolve()
+            line = text[: match.start()].count("\n") + 1
+            rel = md.relative_to(root)
+            if not resolved.is_relative_to(root):
+                failures.append(
+                    f"{rel}:{line}: link escapes the repo -> {target}"
+                )
+            elif not resolved.exists():
+                failures.append(f"{rel}:{line}: dead link -> {target}")
+    return failures
+
+
+def main() -> int:
+    root = Path(sys.argv[1]) if len(sys.argv) > 1 else Path(__file__).parents[1]
+    root = root.resolve()
+    failures = dead_links(root)
+    for f in failures:
+        print(f, file=sys.stderr)
+    checked = len(doc_files(root))
+    if failures:
+        print(
+            f"FAILED: {len(failures)} dead link(s) across {checked} doc "
+            f"file(s)",
+            file=sys.stderr,
+        )
+        return 1
+    print(f"ok: no dead relative links across {checked} doc file(s)")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
