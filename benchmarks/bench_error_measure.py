@@ -5,6 +5,7 @@ import jax
 import numpy as np
 
 from repro.core import ERAConfig, get_solver
+from repro.serving import result_keys as K
 
 from benchmarks import common as C
 
@@ -17,7 +18,7 @@ def run() -> None:
             mix.noisy(scale) if scale else mix.eps, xT, C.SCHEDULE,
             ERAConfig(nfe=20, k=4, error_norm="mean"),
         )
-        hist = np.asarray(out.aux["delta_eps_history"])
+        hist = np.asarray(out.aux[K.DELTA_EPS_HISTORY])
         early = float(hist[4:9].mean())
         late = float(hist[-5:-1].mean())
         C.emit(

@@ -55,6 +55,16 @@ Both modes report p50/p99 latency, throughput, mean fused batch rows, and
 compiled-program counts; the sweep is written as `BENCH_seqmix.json` (the
 CI bench-smoke job uploads it).  See `docs/serving.md` for the masking
 contract that makes fused results bit-identical to exact-shape runs.
+
+Front-door sweep (`--frontdoor`): boots the real HTTP server as a
+subprocess (`python -m repro.launch.serve --listen --port 0`, waiting on
+its `FRONTDOOR READY <url>` line), then drives an open-loop Poisson client
+over the wire — every request pays JSON + base64 + loopback TCP, and
+concurrent wire requests fuse in the server's scheduler exactly like
+in-process submits.  Reports wire p50/p99 arrival-to-result latency and
+throughput per load, scrapes `/metrics` and asserts the serving
+instruments are present, and writes `BENCH_frontdoor.json` (the CI
+bench-smoke job uploads it).
 """
 
 import argparse
@@ -73,9 +83,11 @@ from repro.core import solver_names
 from repro.serving import (
     AsyncBatchedSampler,
     BatchedSampler,
+    FrontDoorClient,
     SampleRequest,
     SchedulerPolicy,
     open_loop,
+    result_keys as K,
 )
 
 MESH_SWEEP_DEVICES = (1, 8)
@@ -96,9 +108,9 @@ def run(mesh=None) -> None:
     for bs in batch_sizes:
         def drain_once(offset: int):
             tickets = [
-                engine.submit(
+                engine.submit_with_future(
                     SampleRequest(batch=1, seq_len=seq, nfe=nfe, seed=offset + i)
-                )
+                )[0]
                 for i in range(bs)
             ]
             t0 = time.perf_counter()
@@ -158,7 +170,7 @@ def _run_baseline(engine, params, gaps, seq, nfe):
             if item is None:
                 return
             t_arrive, req = item
-            engine.submit(req)
+            engine.submit_with_future(req)
             engine.drain(params)
             lats.append(time.perf_counter() - t_arrive)
 
@@ -202,13 +214,13 @@ def run_poisson(out_path: str = "BENCH_serving.json") -> None:
     # compile every bucket program before any timed stream
     for bucket in buckets:
         for i in range(bucket):
-            engine.submit(_request(seq, nfe, 9000 + i))
+            engine.submit_with_future(_request(seq, nfe, 9000 + i))
         engine.drain(params)
 
     # single-request service time anchors the arrival rates
     t_single = float("inf")
     for r in range(3):
-        engine.submit(_request(seq, nfe, 9100 + r))
+        engine.submit_with_future(_request(seq, nfe, 9100 + r))
         t0 = time.perf_counter()
         engine.drain(params)
         t_single = min(t_single, time.perf_counter() - t0)
@@ -249,8 +261,8 @@ def run_poisson(out_path: str = "BENCH_serving.json") -> None:
             )
             cand = {
                 "throughput_rps": n_req / span,
-                "mean_batch_rows": stats["mean_batch_rows"],
-                "batches": stats["batches"],
+                K.MEAN_BATCH_ROWS: stats[K.MEAN_BATCH_ROWS],
+                K.BATCHES: stats[K.BATCHES],
                 **_percentiles(lats),
             }
             if asyn is None or cand["throughput_rps"] > asyn["throughput_rps"]:
@@ -273,7 +285,7 @@ def run_poisson(out_path: str = "BENCH_serving.json") -> None:
             f"serving/era/poisson/load{load:g}/speedup",
             entry["speedup"] * 1e6,
             f"async_thpt/base_thpt={entry['speedup']:.2f}x,"
-            f"mean_batch_rows={asyn['mean_batch_rows']:.1f}",
+            f"mean_batch_rows={asyn[K.MEAN_BATCH_ROWS]:.1f}",
         )
 
     with open(out_path, "w") as f:
@@ -311,7 +323,7 @@ def run_solver_sweep(out_path: str = "BENCH_solvers.json") -> None:
 
             def drain_once(offset: int):
                 tickets = [
-                    engine.submit(
+                    engine.submit_with_future(
                         SampleRequest(
                             batch=1,
                             seq_len=seq,
@@ -319,7 +331,7 @@ def run_solver_sweep(out_path: str = "BENCH_solvers.json") -> None:
                             solver=solver,
                             seed=offset + i,
                         )
-                    )
+                    )[0]
                     for i in range(bs)
                 ]
                 t0 = time.perf_counter()
@@ -336,7 +348,7 @@ def run_solver_sweep(out_path: str = "BENCH_solvers.json") -> None:
                     best_wall = wall
                     lat = sum(results[t].latency_s for t in tickets) / bs
             entry["buckets"][str(bs)] = {
-                "wall_s": best_wall,
+                K.WALL_S: best_wall,
                 "lat_ms": lat * 1e3,
                 "throughput_rps": bs / best_wall,
             }
@@ -383,7 +395,7 @@ def run_seq_mix(out_path: str = "BENCH_seqmix.json") -> None:
     anchor = BatchedSampler(dlm, C.SCHEDULE, batch_buckets=batch_buckets)
     t_single = float("inf")
     for r in range(3):
-        anchor.submit(_request(max(seq_lens), nfe, 9500 + r))
+        anchor.submit_with_future(_request(max(seq_lens), nfe, 9500 + r))
         t0 = time.perf_counter()
         anchor.drain(params)
         t_single = min(t_single, time.perf_counter() - t0)
@@ -434,8 +446,8 @@ def run_seq_mix(out_path: str = "BENCH_seqmix.json") -> None:
             lats, span, stats = stream(engine)
             cand = {
                 "throughput_rps": n_req / span,
-                "mean_batch_rows": stats["mean_batch_rows"],
-                "batches": stats["batches"],
+                K.MEAN_BATCH_ROWS: stats[K.MEAN_BATCH_ROWS],
+                K.BATCHES: stats[K.BATCHES],
                 **_percentiles(lats),
             }
             if best is None or cand["throughput_rps"] > best["throughput_rps"]:
@@ -448,7 +460,7 @@ def run_seq_mix(out_path: str = "BENCH_seqmix.json") -> None:
             best["p50_ms"] * 1e3,
             f"p99_ms={best['p99_ms']:.2f},thpt={best['throughput_rps']:.1f}/s,"
             f"compiles={best['compiled_programs']},"
-            f"rows/batch={best['mean_batch_rows']:.1f}",
+            f"rows/batch={best[K.MEAN_BATCH_ROWS]:.1f}",
         )
 
     fused, exact = record["modes"]["fused"], record["modes"]["exact"]
@@ -480,6 +492,137 @@ def run_seq_mix(out_path: str = "BENCH_seqmix.json") -> None:
             f"# WARNING: fused mixed-length throughput did not beat the "
             f"exact-shape baseline (speedup {record['speedup']:.2f}x)"
         )
+
+
+FRONTDOOR_LOADS = (2.0, 4.0)
+# instruments the /metrics scrape must expose (acceptance contract —
+# see docs/serving.md)
+FRONTDOOR_REQUIRED_METRICS = (
+    "sampler_queue_depth_rows",
+    "sampler_fuse_occupancy_ratio",
+    "sampler_compile_cache_hits_total",
+    "sampler_compile_cache_misses_total",
+    "sampler_admission_rejects_total",
+    "sampler_request_latency_seconds",
+    "frontdoor_http_requests_total",
+)
+
+
+def _boot_frontdoor_server(nfe: int, seq: int, max_wait_ms: float):
+    """Launch `repro.launch.serve --listen --port 0` as a subprocess and
+    wait for its `FRONTDOOR READY <url>` sentinel.  Returns (proc, url)."""
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(root, "src") + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else ""
+    )
+    proc = subprocess.Popen(
+        [
+            sys.executable, "-m", "repro.launch.serve",
+            "--arch", "llama3.2-1b", "--smoke", "--mode", "diffusion",
+            "--listen", "--port", "0", "--nfe", str(nfe), "--seq", str(seq),
+            "--max-wait-ms", str(max_wait_ms),
+            # finer ladder than the serving default: an open-loop stream
+            # launches whatever accumulated (same reasoning as --poisson),
+            # and the warmup only has these buckets to compile
+            "--batch-buckets", "1,2,4,8",
+        ],
+        stdout=subprocess.PIPE,
+        text=True,
+        cwd=root,
+        env=env,
+    )
+    try:
+        for line in proc.stdout:
+            if line.startswith("FRONTDOOR READY "):
+                return proc, line.split()[-1].strip()
+        raise RuntimeError(
+            f"server exited (rc={proc.wait()}) before the ready line"
+        )
+    except Exception:
+        proc.terminate()
+        raise
+
+
+def run_frontdoor(out_path: str = "BENCH_frontdoor.json") -> None:
+    """Open-loop Poisson sweep over the wire: the real HTTP server in a
+    subprocess, one client thread per in-flight request, every sample
+    paying JSON + base64 + loopback TCP on top of the engine."""
+    nfe = 6 if C.SMOKE else 10
+    seq = 8
+    n_req = 24 if C.SMOKE else 96
+    proc, url = _boot_frontdoor_server(nfe, seq, max_wait_ms=25.0)
+    try:
+        client = FrontDoorClient(url, timeout=600.0)
+
+        # single-request wire service time anchors the arrival rates
+        t_single = float("inf")
+        for i in range(3):
+            t0 = time.perf_counter()
+            client.sample(_request(seq, nfe, 9200 + i))
+            t_single = min(t_single, time.perf_counter() - t0)
+
+        def stream(gaps, seed0: int):
+            lats = [None] * len(gaps)
+            threads = []
+
+            def fire(i: int):
+                def call():
+                    t0 = time.perf_counter()
+                    client.sample(_request(seq, nfe, seed0 + i))
+                    lats[i] = time.perf_counter() - t0
+
+                th = threading.Thread(target=call)
+                th.start()
+                threads.append(th)
+
+            t_start = open_loop(gaps, fire)
+            for th in threads:
+                th.join()
+            return lats, time.perf_counter() - t_start
+
+        record = {
+            "bench": "serving/frontdoor",
+            "smoke": C.SMOKE,
+            "nfe": nfe,
+            "seq_len": seq,
+            "requests": n_req,
+            "t_single_wire_s": t_single,
+            "url": url,
+            "sweep": [],
+        }
+        rng = np.random.default_rng(0)
+        for load in FRONTDOOR_LOADS:
+            rate = load / t_single
+            best = None
+            for r in range(POISSON_REPEATS):
+                lats, span = stream(
+                    _poisson_gaps(rng, n_req, rate), 4000 + 1000 * r
+                )
+                cand = {"throughput_rps": n_req / span, **_percentiles(lats)}
+                if best is None or cand["throughput_rps"] > best["throughput_rps"]:
+                    best = cand
+            record["sweep"].append({"load": load, "rate_rps": rate, **best})
+            C.emit(
+                f"serving/era/frontdoor/load{load:g}",
+                best["p50_ms"] * 1e3,
+                f"p99_ms={best['p99_ms']:.2f},thpt={best['throughput_rps']:.1f}/s",
+            )
+
+        # /metrics scrape: the serving instruments must all be present
+        scrape = client.metrics()
+        missing = [m for m in FRONTDOOR_REQUIRED_METRICS if m not in scrape]
+        if missing:
+            raise RuntimeError(f"/metrics is missing instruments: {missing}")
+        record["metrics_ok"] = True
+        record["healthz"] = client.healthz()["stats"]
+    finally:
+        proc.terminate()
+        proc.wait()
+
+    with open(out_path, "w") as f:
+        json.dump(record, f, indent=2)
+    print(f"# wrote {out_path}")
 
 
 def run_on_local_mesh() -> None:
@@ -542,11 +685,17 @@ if __name__ == "__main__":
         "vs exact-shape grouping; writes BENCH_seqmix.json",
     )
     ap.add_argument(
+        "--frontdoor",
+        action="store_true",
+        help="open-loop Poisson sweep over the wire against a subprocess "
+        "HTTP front-door server; writes BENCH_frontdoor.json",
+    )
+    ap.add_argument(
         "--out",
         default=None,
         help="JSON artifact path (default BENCH_serving.json for --poisson, "
         "BENCH_solvers.json for --solver-sweep, BENCH_seqmix.json for "
-        "--seq-mix)",
+        "--seq-mix, BENCH_frontdoor.json for --frontdoor)",
     )
     args = ap.parse_args()
     if args.mesh:
@@ -559,5 +708,7 @@ if __name__ == "__main__":
         run_solver_sweep(args.out or "BENCH_solvers.json")
     elif args.seq_mix:
         run_seq_mix(args.out or "BENCH_seqmix.json")
+    elif args.frontdoor:
+        run_frontdoor(args.out or "BENCH_frontdoor.json")
     else:
         run()

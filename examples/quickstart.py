@@ -99,14 +99,17 @@ def main() -> None:
     from repro.serving import BatchedSampler, SampleRequest
 
     engine = BatchedSampler(dlm, sched, batch_buckets=(1, 8))
-    tickets = [
-        engine.submit(SampleRequest(batch=1, seq_len=seq, nfe=args.nfe, seed=s))
+    futs = [
+        engine.submit_with_future(
+            SampleRequest(batch=1, seq_len=seq, nfe=args.nfe, seed=s)
+        )[1]
         for s in range(4)
     ]
-    results = engine.drain(res.params)
-    lat = sum(results[t].latency_s for t in tickets) / len(tickets)
-    print(f"batched engine: {len(tickets)} requests fused to "
-          f"batch {results[tickets[0]].padded_batch}, "
+    engine.drain(res.params)
+    results = [f.result() for f in futs]
+    lat = sum(r.latency_s for r in results) / len(results)
+    print(f"batched engine: {len(results)} requests fused to "
+          f"batch {results[0].padded_batch}, "
           f"mean latency {lat * 1e3:.1f} ms "
           f"({len(engine.compile_cache())} compiled bucket)")
 

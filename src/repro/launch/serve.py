@@ -6,12 +6,28 @@
         --mode diffusion --solver era --nfe 10
     PYTHONPATH=src python -m repro.launch.serve --arch qwen2-1.5b --smoke \
         --mode diffusion --continuous --requests 16 --rate 20
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen2-1.5b --smoke \
+        --mode diffusion --listen --port 0
+    PYTHONPATH=src python -m repro.launch.serve \
+        --mode diffusion --connect http://127.0.0.1:8752 --requests 4
 
 ``--continuous`` drives the continuous-batching scheduler with a simulated
 open-loop client: ``--requests`` single-sample requests arrive with Poisson
 gaps at ``--rate`` req/s (open-loop — arrivals never wait for service), and
 the run reports p50/p99 arrival-to-result latency, throughput, and how full
 the fused batches ran.
+
+``--listen`` runs the HTTP front door (``POST /v1/sample``, ``GET
+/metrics``, ``GET /healthz`` — see docs/serving.md) over the same engine
+and scheduler; once the socket is bound it prints the machine-parsable
+ready line ``FRONTDOOR READY <url>`` (``--port 0`` binds an ephemeral
+port) and serves until interrupted.  ``--connect URL`` is the matching
+wire client: it needs no model or params, just the server's URL.
+
+Every diffusion mode builds its engine through
+:func:`repro.serving.build_engine` — the one-shot facade, the continuous
+simulator, and the HTTP server run the same construction path, so a
+result observed over the wire is the result the in-process paths produce.
 """
 
 from __future__ import annotations
@@ -24,7 +40,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import arch_names, get_config
-from repro.core import ERAConfig, default_config, linear_schedule, solver_names
+from repro.core import linear_schedule, solver_names
 from repro.data import frontend_features
 from repro.models import build_model
 from repro.models.diffusion import DiffusionLM
@@ -32,20 +48,58 @@ from repro.serving import (
     AsyncBatchedSampler,
     BatchedSampler,
     Engine,
+    EngineConfig,
+    FrontDoorClient,
     SampleRequest,
     SamplerService,
     SchedulerPolicy,
     ServeConfig,
+    build_engine,
     open_loop,
+    result_keys as K,
+    serve_frontdoor,
 )
 
 
-def _solver_config(args, per_sample: bool = False):
-    if args.solver == "era":
-        return ERAConfig(
-            nfe=args.nfe, k=args.k, lam=args.lam, per_sample=per_sample
-        )
-    return default_config(args.solver, nfe=args.nfe)
+def _engine_config(args, per_sample: bool, fused: bool) -> EngineConfig:
+    """CLI args -> the one EngineConfig every diffusion mode builds from.
+    ``fused`` engines get the serving bucket ladder; the one-shot facade
+    runs exact-size (no fusion)."""
+    seq_buckets = (
+        tuple(int(x) for x in args.seq_buckets.split(","))
+        if args.seq_buckets
+        else None
+    )
+    batch_buckets = tuple(int(x) for x in args.batch_buckets.split(","))
+    return EngineConfig(
+        solver=args.solver,
+        nfe=args.nfe,
+        k=args.k,
+        lam=args.lam,
+        per_sample=per_sample,
+        batch_buckets=batch_buckets if fused else None,
+        seq_buckets=seq_buckets if fused else None,
+    )
+
+
+def _warm_engine(engine: BatchedSampler, params, args, mix, lens) -> None:
+    """Compile every (solver, batch bucket, seq group) program before
+    serving — one warmup drain per distinct group so lone requests at any
+    length hit a warm program."""
+    seq_groups = sorted({engine.executor.group_key(
+        SampleRequest(batch=1, seq_len=ln, nfe=args.nfe)
+    )[1] for ln in lens})
+    for solver in mix:
+        for bucket in engine.batch_buckets:
+            for seq in seq_groups:
+                for i in range(bucket):
+                    engine.submit_with_future(
+                        SampleRequest(
+                            batch=1, seq_len=seq, nfe=args.nfe,
+                            solver=solver, seed=10_000 + i,
+                        )
+                    )
+                engine.drain(params)
 
 
 def run_continuous(dlm, params, args) -> None:
@@ -57,41 +111,15 @@ def run_continuous(dlm, params, args) -> None:
     ``--seq-buckets`` + ``--seq-mix-lens``, requests of different lengths
     fuse into shared length-masked batches (see docs/serving.md)."""
     mix = [s.strip() for s in args.mix.split(",")] if args.mix else [args.solver]
-    seq_buckets = (
-        tuple(int(x) for x in args.seq_buckets.split(","))
-        if args.seq_buckets
-        else None
-    )
     lens = (
         [int(x) for x in args.seq_mix_lens.split(",")]
         if args.seq_mix_lens
         else [args.seq]
     )
-    engine = BatchedSampler(
-        dlm,
-        linear_schedule(),
-        args.solver,
-        _solver_config(args, per_sample=True),
-        batch_buckets=(1, 8, 64),
-        seq_buckets=seq_buckets,
+    engine = build_engine(
+        dlm, linear_schedule(), _engine_config(args, per_sample=True, fused=True)
     )
-    # compile every (solver, batch bucket, seq group) program before the
-    # timed stream — one warmup drain per distinct seq group so lone
-    # requests at any length hit a warm program
-    seq_groups = sorted({engine.executor.group_key(
-        SampleRequest(batch=1, seq_len=ln, nfe=args.nfe)
-    )[1] for ln in lens})
-    for solver in mix:
-        for bucket in engine.batch_buckets:
-            for seq in seq_groups:
-                for i in range(bucket):
-                    engine.submit(
-                        SampleRequest(
-                            batch=1, seq_len=seq, nfe=args.nfe,
-                            solver=solver, seed=10_000 + i,
-                        )
-                    )
-                engine.drain(params)
+    _warm_engine(engine, params, args, mix, lens)
 
     policy = SchedulerPolicy(
         max_wait_ms=args.max_wait_ms, target_occupancy=args.occupancy
@@ -121,8 +149,64 @@ def run_continuous(dlm, params, args) -> None:
         f"p50={np.percentile(lats_ms, 50):.1f}ms "
         f"p99={np.percentile(lats_ms, 99):.1f}ms "
         f"thpt={args.requests / makespan:.1f}/s "
-        f"batches={stats['batches']} "
-        f"mean_rows={stats['mean_batch_rows']:.1f}"
+        f"batches={stats[K.BATCHES]} "
+        f"mean_rows={stats[K.MEAN_BATCH_ROWS]:.1f}"
+    )
+
+
+def run_listen(dlm, params, args) -> None:
+    """HTTP front-door server: bind, print the ready line, serve until
+    interrupted.  Warms the default solver's buckets first so the first
+    wire request doesn't pay a compile."""
+    engine = build_engine(
+        dlm, linear_schedule(), _engine_config(args, per_sample=True, fused=True)
+    )
+    if args.warm:
+        _warm_engine(engine, params, args, [args.solver], [args.seq])
+    policy = SchedulerPolicy(
+        max_wait_ms=args.max_wait_ms,
+        target_occupancy=args.occupancy,
+        max_queue_rows=args.max_queue_rows,
+    )
+    door = serve_frontdoor(
+        engine, params, policy, host=args.host, port=args.port
+    )
+    # machine-parsable sentinel: bench_serving and tests wait for this
+    # line before opening the client
+    print(f"FRONTDOOR READY {door.url}", flush=True)
+    try:
+        while True:
+            time.sleep(3600)
+    except KeyboardInterrupt:
+        pass
+    finally:
+        door.stop()
+
+
+def run_connect(args) -> None:
+    """Wire client: sample over HTTP against a running ``--listen``
+    server.  Needs no local model — the request is pure schema."""
+    client = FrontDoorClient(args.connect, timeout=args.timeout)
+    lats_ms = []
+    for i in range(args.requests):
+        t0 = time.perf_counter()
+        res = client.sample(
+            SampleRequest(
+                batch=args.batch, seq_len=args.seq, nfe=args.nfe,
+                solver=args.solver, seed=args.seed + i,
+            )
+        )
+        lats_ms.append((time.perf_counter() - t0) * 1e3)
+        x0 = res.x0
+        print(
+            f"req[{i}] x0 {x0.shape} via {args.solver} nfe={args.nfe} | "
+            f"wire={lats_ms[-1]:.1f}ms engine_wall={res.info[K.WALL_S]:.2f}s "
+            f"(mean {float(np.mean(x0)):+.4f}, std {float(np.std(x0)):.4f})"
+        )
+    print(
+        f"connect: {args.requests} req | "
+        f"p50={np.percentile(lats_ms, 50):.1f}ms "
+        f"p99={np.percentile(lats_ms, 99):.1f}ms"
     )
 
 
@@ -148,6 +232,38 @@ def main() -> None:
         help="serve a simulated open-loop Poisson stream through the "
         "continuous-batching scheduler (diffusion mode only)",
     )
+    ap.add_argument(
+        "--listen",
+        action="store_true",
+        help="run the HTTP front door over the continuous-batching "
+        "scheduler (diffusion mode only); prints 'FRONTDOOR READY <url>' "
+        "once bound",
+    )
+    ap.add_argument("--host", default="127.0.0.1")
+    ap.add_argument(
+        "--port", type=int, default=0,
+        help="--listen port (0 = ephemeral, reported in the ready line)",
+    )
+    ap.add_argument(
+        "--connect",
+        default=None,
+        metavar="URL",
+        help="act as a wire client against a running --listen server "
+        "(diffusion mode only; no local model needed)",
+    )
+    ap.add_argument(
+        "--timeout", type=float, default=None,
+        help="--connect per-request socket timeout in seconds",
+    )
+    ap.add_argument(
+        "--max-queue-rows", type=int, default=None,
+        help="--listen admission bound per fuse-group queue (HTTP 429 "
+        "past it; default unbounded)",
+    )
+    ap.add_argument(
+        "--no-warm", dest="warm", action="store_false",
+        help="skip the --listen compile warmup drains",
+    )
     ap.add_argument("--requests", type=int, default=16)
     ap.add_argument(
         "--mix",
@@ -157,6 +273,12 @@ def main() -> None:
         "'era,ddim,dpm_solver_pp2m'",
     )
     ap.add_argument("--rate", type=float, default=20.0, help="arrivals/s")
+    ap.add_argument(
+        "--batch-buckets",
+        default="1,8,64",
+        help="comma-separated batch-shape ladder for the fused "
+        "(--continuous/--listen) engine",
+    )
     ap.add_argument(
         "--seq-buckets",
         default=None,
@@ -176,8 +298,11 @@ def main() -> None:
         "bucket is pending",
     )
     args = ap.parse_args()
-    if args.continuous and args.mode != "diffusion":
-        ap.error("--continuous requires --mode diffusion")
+    if (args.continuous or args.listen or args.connect) and args.mode != "diffusion":
+        ap.error("--continuous/--listen/--connect require --mode diffusion")
+    if args.connect:
+        run_connect(args)
+        return
 
     cfg = get_config(args.arch, smoke=args.smoke)
     model = build_model(cfg)
@@ -186,19 +311,27 @@ def main() -> None:
     if args.mode == "diffusion":
         dlm = DiffusionLM(model)
         params = dlm.init(key)
+        if args.listen:
+            run_listen(dlm, params, args)
+            return
         if args.continuous:
             run_continuous(dlm, params, args)
             return
         svc = SamplerService(
-            dlm, linear_schedule(), args.solver, _solver_config(args)
+            engine=build_engine(
+                dlm,
+                linear_schedule(),
+                _engine_config(args, per_sample=False, fused=False),
+            )
         )
         req = SampleRequest(
             batch=args.batch, seq_len=args.seq, nfe=args.nfe, seed=args.seed
         )
-        x0, info = svc.sample(params, req)
+        res = svc.sample(params, req)
+        x0 = res.x0
         print(
             f"sampled latents {x0.shape} via {args.solver} nfe={args.nfe} "
-            f"in {info['wall_s']:.2f}s "
+            f"in {res.info[K.WALL_S]:.2f}s "
             f"(mean {float(jnp.mean(x0)):+.4f}, std {float(jnp.std(x0)):.4f})"
         )
         return

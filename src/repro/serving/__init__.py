@@ -4,6 +4,7 @@ from repro.parallel.sharding import (
     sampler_pspecs,
     sampler_shardings,
 )
+from repro.serving import result_keys
 from repro.serving.diffusion_sampler import (
     BatchedSampler,
     SamplerService,
@@ -11,24 +12,59 @@ from repro.serving.diffusion_sampler import (
 )
 from repro.serving.engine import Engine, ServeConfig, cache_slots, resolve_window
 from repro.serving.executor import FusedExecutor, SampleRequest, SampleResult
-from repro.serving.scheduler import AsyncBatchedSampler, SchedulerPolicy, open_loop
+from repro.serving.factory import EngineConfig, build_engine, make_solver_config
+from repro.serving.frontdoor import (
+    SCHEMA_VERSION,
+    FrontDoor,
+    FrontDoorClient,
+    SchemaError,
+    decode_request,
+    decode_result,
+    encode_request,
+    encode_result,
+    serve_frontdoor,
+)
+from repro.serving.metrics import MetricsRegistry
+from repro.serving.scheduler import (
+    AsyncBatchedSampler,
+    DeadlineExceededError,
+    QueueFullError,
+    SchedulerPolicy,
+    open_loop,
+)
 
 __all__ = [
+    "SCHEMA_VERSION",
     "AsyncBatchedSampler",
     "BatchedSampler",
+    "DeadlineExceededError",
     "Engine",
+    "EngineConfig",
+    "FrontDoor",
+    "FrontDoorClient",
     "FusedExecutor",
+    "MetricsRegistry",
+    "QueueFullError",
     "SampleRequest",
     "SampleResult",
     "SamplerService",
     "SamplerShardings",
     "SamplerSpecs",
     "SchedulerPolicy",
+    "SchemaError",
     "ServeConfig",
+    "build_engine",
     "cache_slots",
+    "decode_request",
+    "decode_result",
+    "encode_request",
+    "encode_result",
     "fused_path_ok",
+    "make_solver_config",
     "open_loop",
     "resolve_window",
+    "result_keys",
     "sampler_pspecs",
     "sampler_shardings",
+    "serve_frontdoor",
 ]

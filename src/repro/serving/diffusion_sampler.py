@@ -52,6 +52,7 @@ from __future__ import annotations
 
 import threading
 import time
+import warnings
 from concurrent.futures import Future
 
 import jax
@@ -67,6 +68,7 @@ from repro.serving.executor import (
     SampleResult,
     resolve_future,
 )
+from repro.serving.metrics import MetricsRegistry
 
 Array = jax.Array
 
@@ -101,10 +103,11 @@ class BatchedSampler:
         batch_buckets: tuple[int, ...] | None = (1, 8, 64),
         mesh: Mesh | None = None,
         seq_buckets: tuple[int, ...] | None = None,
+        metrics: MetricsRegistry | None = None,
     ):
         self.executor = FusedExecutor(
             dlm, schedule, solver, solver_config, batch_buckets, mesh,
-            seq_buckets=seq_buckets,
+            seq_buckets=seq_buckets, metrics=metrics,
         )
         self._queue_lock = threading.Lock()
         self._pending: list[QueueItem] = []
@@ -144,16 +147,29 @@ class BatchedSampler:
     def seq_buckets(self) -> tuple[int, ...] | None:
         return self.executor.seq_buckets
 
+    @property
+    def metrics(self) -> MetricsRegistry:
+        return self.executor.metrics
+
     # ---- request queue -------------------------------------------------
     def submit(self, req: SampleRequest) -> int:
-        """Enqueue a request; returns its ticket for the drain() result map.
+        """Deprecated: enqueue a request and return its int ticket for the
+        drain() result map.
 
-        Thread-safe; invalid requests are rejected here, not at drain time.
-        Callers that wait off-thread while another thread drains should use
-        :meth:`submit_with_future` instead — with concurrent drains, the
-        window between ``submit()`` and ``future()`` is wide enough for
-        delivery to pop the Future first.
+        The int-ticket surface predates futures and cannot express
+        off-thread waiting safely (with concurrent drains, the window
+        between ``submit()`` and ``future()`` is wide enough for delivery
+        to pop the Future first) — use :meth:`submit_with_future`, whose
+        Future is also what the scheduler and the front door deliver
+        through.  Thread-safe; invalid requests are rejected here, not at
+        drain time.
         """
+        warnings.warn(
+            "BatchedSampler.submit (int tickets) is deprecated; use "
+            "submit_with_future() and wait on the returned Future",
+            DeprecationWarning,
+            stacklevel=2,
+        )
         return self.submit_with_future(req)[0]
 
     def submit_with_future(self, req: SampleRequest) -> tuple[int, Future]:
@@ -247,57 +263,63 @@ class SamplerService:
     """One-call facade over :class:`BatchedSampler` (exact-size buckets).
 
     ``sample()`` is synchronous and blocking: it submits, drains, and
-    returns the finished ``(x0, info)``.  It is thread-safe (the underlying
-    engine is), but callers wanting concurrency should use
-    :class:`BatchedSampler` or the async scheduler directly — the facade
-    runs one exact-size batch per call and never fuses strangers.
+    returns the finished :class:`~repro.serving.executor.SampleResult` —
+    the same type every other entry point delivers.  ``result.x0`` is the
+    latents; ``result.info`` flattens the engine telemetry
+    (:data:`~repro.serving.result_keys.INFO_KEYS`: ``wall_s`` /
+    ``latency_s`` / ``padded_batch`` / ``padded_seq_len``) together with
+    every solver diagnostic from ``result.aux`` (``delta_eps_history``,
+    ``ers_selection_history``, ...), scoped to this request.  The
+    pre-unification ``x0, info = svc.sample(...)`` tuple unpacking still
+    works as a deprecation shim.
 
-    Info-dict keys returned alongside ``x0``:
+    It is thread-safe (the underlying engine is), but callers wanting
+    concurrency should use :class:`BatchedSampler` or the async scheduler
+    directly — the facade runs one exact-size batch per call and never
+    fuses strangers.
 
-    * ``wall_s`` — wall time of the fused batch this request rode in;
-    * ``latency_s`` — submit→result wall time for this request;
-    * ``padded_batch`` — batch size the compiled program ran at (== the
-      request's ``batch`` here, since the facade uses exact-size buckets);
-    * ``padded_seq_len`` — sequence length the compiled program ran at
-      (== the request's ``seq_len`` here; a seq bucket when a bucketed
-      engine serves the request);
-    * plus every solver diagnostic from ``SampleResult.aux``
-      (``delta_eps_history``, ``ers_selection_history``, ...), scoped to
-      this request.
+    ``engine=`` injects a pre-built :class:`BatchedSampler` (e.g. from
+    :func:`repro.serving.factory.build_engine`) instead of constructing a
+    private exact-size one — the facade then inherits that engine's
+    buckets, mesh, and metrics registry.
     """
 
     def __init__(
         self,
-        dlm: DiffusionLM,
-        schedule: NoiseSchedule,
+        dlm: DiffusionLM | None = None,
+        schedule: NoiseSchedule | None = None,
         solver: str = "era",
         solver_config: SolverConfig | None = None,
         mesh: Mesh | None = None,
+        engine: BatchedSampler | None = None,
     ):
-        self.dlm = dlm
-        self.schedule = schedule
-        self.solver_name = solver
-        if solver_config is None:
-            # the facade defaults to the paper config (shared-delta ERA),
-            # not the engine's fusable serving default — it runs exact-size
-            solver_config = get_program(solver).default_config()
-        self.solver_config = solver_config
-        self._engine = BatchedSampler(
-            dlm, schedule, solver, solver_config, batch_buckets=None, mesh=mesh
-        )
+        if engine is None:
+            if dlm is None or schedule is None:
+                raise ValueError(
+                    "SamplerService needs (dlm, schedule) or a pre-built "
+                    "engine="
+                )
+            if solver_config is None:
+                # the facade defaults to the paper config (shared-delta
+                # ERA), not the engine's fusable serving default — it runs
+                # exact-size
+                solver_config = get_program(solver).default_config()
+            engine = BatchedSampler(
+                dlm, schedule, solver, solver_config,
+                batch_buckets=None, mesh=mesh,
+            )
+        self._engine = engine
+        self.dlm = engine.dlm
+        self.schedule = engine.schedule
+        self.solver_name = engine.solver_name
+        self.solver_config = engine.solver_config
 
-    def sample(self, params, req: SampleRequest) -> tuple[Array, dict]:
-        """Generate req.batch sequences of latents via the solver."""
+    def sample(self, params, req: SampleRequest) -> SampleResult:
+        """Generate ``req.batch`` sequences of latents via the solver;
+        blocking.  Returns the request's :class:`SampleResult`."""
         _, fut = self._engine.submit_with_future(req)
         self._engine.drain(params)
-        res: SampleResult = fut.result()
-        return res.x0, {
-            "wall_s": res.batch_wall_s,
-            "latency_s": res.latency_s,
-            "padded_batch": res.padded_batch,
-            "padded_seq_len": res.padded_seq_len,
-            **res.aux,
-        }
+        return fut.result()
 
     # ---- dry-run hook: the full solver loop as one lowerable program ----
     def sample_program(self):

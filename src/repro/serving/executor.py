@@ -52,8 +52,10 @@ interleaving donated-buffer executions.
 from __future__ import annotations
 
 import dataclasses
+import math
 import threading
 import time
+import warnings
 from concurrent.futures import Future, InvalidStateError
 from typing import Any
 
@@ -70,6 +72,8 @@ from repro.parallel.sharding import (
     dp_size,
     round_to_dp,
 )
+from repro.serving import result_keys as K
+from repro.serving.metrics import MetricsRegistry
 
 Array = jax.Array
 
@@ -91,6 +95,16 @@ class SampleRequest:
     regardless of which fused batch, seq bucket, or mesh the request lands
     in — this is what the arrival-determinism and padding-invariance walls
     pin down.
+
+    ``priority`` and ``deadline_ms`` are scheduling hints honored by the
+    continuous-batching drain policy (and carried verbatim over the wire
+    by the front door): when a fuse-group queue launches, higher-priority
+    requests board the batch first; a request still queued
+    ``deadline_ms`` after submit fails fast with
+    :class:`~repro.serving.scheduler.DeadlineExceededError` instead of
+    occupying a fused batch.  Neither field affects results — a request's
+    ``x0`` depends only on ``(seed, seq_len, nfe, solver)``.  The sync
+    ``drain()`` path runs everything pending, so both are no-ops there.
     """
 
     batch: int
@@ -100,6 +114,9 @@ class SampleRequest:
     # solver.  Unknown names are rejected at submit(), not drain time.
     solver: str | None = None
     seed: int = 0
+    # scheduling hints (continuous-batching drain policy; see class doc)
+    priority: int = 0
+    deadline_ms: float | None = None
 
 
 @dataclasses.dataclass
@@ -112,8 +129,15 @@ class SampleResult:
     seq bucketing — its own ``seq_len`` positions (no pad positions).
     ``batch_wall_s`` / ``padded_batch`` / ``padded_seq_len`` describe the
     fused batch the request rode in and are shared by its batch-mates;
-    ``latency_s`` is this request's own submit→result wall time.  These
-    are also the keys surfaced in ``SamplerService.sample``'s info dict.
+    ``latency_s`` is this request's own submit→result wall time.
+
+    This is the **one** result type across the stack: engine drains, the
+    scheduler's futures, ``SamplerService.sample``, and the front door's
+    wire schema all carry exactly this dataclass.  :attr:`info` flattens
+    the telemetry fields plus ``aux`` into one dict under the documented
+    :mod:`~repro.serving.result_keys` keys (what the facade used to return
+    as the second tuple element).  Tuple unpacking ``x0, info = result``
+    still works as a deprecated shim.
     """
 
     x0: Array                # (batch, seq_len, d_model)
@@ -126,6 +150,34 @@ class SampleResult:
     padded_batch: int        # batch bucket size the batch ran at
     padded_seq_len: int      # seq length the batch ran at (== seq bucket
                              # under seq bucketing, else the exact seq_len)
+
+    @property
+    def info(self) -> dict[str, Any]:
+        """Engine telemetry + solver ``aux`` as one dict, keyed by the
+        :mod:`~repro.serving.result_keys` constants."""
+        return {
+            K.WALL_S: self.batch_wall_s,
+            K.LATENCY_S: self.latency_s,
+            K.PADDED_BATCH: self.padded_batch,
+            K.PADDED_SEQ_LEN: self.padded_seq_len,
+            **self.aux,
+        }
+
+    # ---- deprecated (x0, info) tuple shim -------------------------------
+    def _tuple_shim(self):
+        warnings.warn(
+            "tuple unpacking of SampleResult is deprecated; use "
+            "result.x0 and result.info",
+            DeprecationWarning,
+            stacklevel=3,
+        )
+        return (self.x0, self.info)
+
+    def __iter__(self):
+        return iter(self._tuple_shim())
+
+    def __getitem__(self, i):
+        return self._tuple_shim()[i]
 
 
 # A queued request: (ticket, request, submit-time).  Both the sync engine's
@@ -176,6 +228,7 @@ class FusedExecutor:
         batch_buckets: tuple[int, ...] | None = (1, 8, 64),
         mesh: Mesh | None = None,
         seq_buckets: tuple[int, ...] | None = None,
+        metrics: MetricsRegistry | None = None,
     ):
         self.dlm = dlm
         self.schedule = schedule
@@ -203,6 +256,33 @@ class FusedExecutor:
         self._shardings_cache: dict[Any, Any] = {}
         self._replicate = ParamReplicator(mesh) if mesh is not None else None
         self._lock = threading.RLock()
+        # one registry per executor: the scheduler and front door instrument
+        # into the same scrape (get-or-create registration, so sharing is
+        # idempotent).  Everything below is cheap host-side accounting.
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
+        self._m_compile_hits = self.metrics.counter(
+            "sampler_compile_cache_hits_total",
+            "fused chunks served by an already-compiled bucket program",
+        )
+        self._m_compile_misses = self.metrics.counter(
+            "sampler_compile_cache_misses_total",
+            "bucket programs compiled (one per (solver, shape) bucket)",
+        )
+        self._m_batches = self.metrics.counter(
+            "sampler_batches_total", "fused batches executed"
+        )
+        self._m_rows = self.metrics.counter(
+            "sampler_batch_rows_total",
+            "real (non-pad) request rows executed across fused batches",
+        )
+        self._m_occupancy = self.metrics.histogram(
+            "sampler_fuse_occupancy_ratio",
+            "real rows / padded rows per fused batch (1.0 = no pad waste)",
+            buckets=(0.125, 0.25, 0.375, 0.5, 0.625, 0.75, 0.875, 1.0),
+        )
+        self._m_wall = self.metrics.histogram(
+            "sampler_batch_wall_seconds", "device wall time per fused batch"
+        )
 
     # ---- solver routing --------------------------------------------------
     def resolve_solver(self, req: SampleRequest) -> str:
@@ -306,6 +386,22 @@ class FusedExecutor:
                 f"{self.seq_buckets[-1]}; extend seq_buckets or submit "
                 f"requests within the ladder"
             )
+        if not isinstance(req.priority, int) or isinstance(req.priority, bool):
+            raise ValueError(
+                f"priority must be an int, got {req.priority!r}"
+            )
+        if req.deadline_ms is not None:
+            ok = (
+                isinstance(req.deadline_ms, (int, float))
+                and not isinstance(req.deadline_ms, bool)
+                and math.isfinite(req.deadline_ms)
+                and req.deadline_ms > 0
+            )
+            if not ok:
+                raise ValueError(
+                    f"deadline_ms must be a positive finite number of "
+                    f"milliseconds (or None), got {req.deadline_ms!r}"
+                )
         program = self.program_for(req.solver)  # unknown solver raises here
         program.validate(req, self.config_for(req.solver), dp=self.dp)
 
@@ -437,6 +533,10 @@ class FusedExecutor:
         x0, aux = run(params, x_init, lengths, *buffers)
         x0 = jax.block_until_ready(x0)
         wall = time.perf_counter() - t0
+        self._m_batches.inc()
+        self._m_rows.inc(total)
+        self._m_occupancy.observe(total / padded, solver=solver)
+        self._m_wall.observe(wall, solver=solver)
 
         done = time.perf_counter()
         off = 0
@@ -474,6 +574,10 @@ class FusedExecutor:
         carries ``masked`` so an exact-shape group never aliases a masked
         program of the same shape."""
         key = (solver, cfg, batch, seq_len, self.dp, masked)
+        if key in self._jitted:
+            self._m_compile_hits.inc(solver=solver)
+        else:
+            self._m_compile_misses.inc(solver=solver)
         if key not in self._jitted:
             program = self.program_for(solver)
             shardings = self._shardings(program, cfg, batch)

@@ -1,0 +1,91 @@
+"""One engine-construction path for every serve mode.
+
+``launch/serve.py`` grew three ways to stand up a sampling engine (facade,
+continuous scheduler, and now the HTTP front door), each hand-assembling
+solver configs and bucket ladders.  This module is the single factory they
+all go through: an :class:`EngineConfig` captures every engine-shape
+decision as one frozen, hashable value, and :func:`build_engine` turns it
+into a :class:`~repro.serving.diffusion_sampler.BatchedSampler`.  The HTTP
+server, the ``--continuous`` simulator, and the one-shot facade therefore
+serve *the same engine* — same solver config, same fuse buckets, same
+compile-cache shape — so a result observed over the wire is the result the
+in-process paths produce.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core import (
+    ERAConfig,
+    NoiseSchedule,
+    SolverConfig,
+    default_config,
+)
+from repro.models.diffusion import DiffusionLM
+from repro.serving.diffusion_sampler import BatchedSampler
+from repro.serving.metrics import MetricsRegistry
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    """Everything that shapes a serving engine, in one frozen value.
+
+    * ``solver`` / ``nfe`` — the default solver program and its step count
+      (per-request ``SampleRequest.solver`` routing still works on top).
+    * ``k`` / ``lam`` — ERA Lagrange order and error-robust selection
+      weight (ignored by non-ERA solvers, which take their registry
+      defaults at this ``nfe``).
+    * ``per_sample`` — per-sample ERS (the serving default: keeps every
+      row of a fused batch independent).  ``False`` = the paper's shared
+      scalar delta_eps, which couples a batch, so the engine serves such
+      configs one exact-size request at a time.
+    * ``batch_buckets`` — compiled batch-shape ladder (``None`` =
+      exact-size, no fusion — the facade's shape).
+    * ``seq_buckets`` — opt-in mixed-seq-len fusion ladder (``None`` =
+      exact seq_len per fuse group).
+    """
+
+    solver: str = "era"
+    nfe: int = 10
+    k: int = 4
+    lam: float = 5.0
+    per_sample: bool = True
+    batch_buckets: tuple[int, ...] | None = (1, 8, 64)
+    seq_buckets: tuple[int, ...] | None = None
+
+
+def make_solver_config(cfg: EngineConfig) -> SolverConfig:
+    """The default-solver config an :class:`EngineConfig` implies: a full
+    :class:`~repro.core.ERAConfig` for ``era``, the registry default at
+    ``cfg.nfe`` for everything else."""
+    if cfg.solver == "era":
+        return ERAConfig(
+            nfe=cfg.nfe, k=cfg.k, lam=cfg.lam, per_sample=cfg.per_sample
+        )
+    return default_config(cfg.solver, nfe=cfg.nfe)
+
+
+def build_engine(
+    dlm: DiffusionLM,
+    schedule: NoiseSchedule,
+    cfg: EngineConfig | None = None,
+    mesh=None,
+    metrics: MetricsRegistry | None = None,
+) -> BatchedSampler:
+    """Construct the engine every serve mode shares.
+
+    ``mesh`` and ``metrics`` are runtime resources, not engine shape, so
+    they ride alongside the config rather than inside it (a mesh is not
+    hashable; a registry is per-process state)."""
+    cfg = cfg if cfg is not None else EngineConfig()
+    return BatchedSampler(
+        dlm,
+        schedule,
+        cfg.solver,
+        make_solver_config(cfg),
+        batch_buckets=cfg.batch_buckets,
+        mesh=mesh,
+        seq_buckets=cfg.seq_buckets,
+        metrics=metrics,
+    )

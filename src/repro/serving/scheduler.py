@@ -19,9 +19,22 @@ the standard continuous-batching shape for fixed-cost (known-NFE) solvers:
 * a background drain thread launches a queue when it reaches the policy's
   target bucket occupancy, or when its oldest request has waited
   ``max_wait_ms`` (deadline promotion — a lone request can never starve);
-* ready queues are served oldest-request-first, FIFO within a queue, and
-  each launch takes at most one largest-bucket's worth of rows (the rest
-  keep their original arrival times for the next launch).
+* ready queues are served highest-priority-first (a queue's priority is
+  its most urgent pending request's), then oldest-request-first; within a
+  queue, higher-``priority`` requests board a launch first (FIFO among
+  equal priorities), and each launch takes at most one largest-bucket's
+  worth of rows (the rest keep their original arrival times for the next
+  launch).
+
+**Admission control** (``SchedulerPolicy.max_queue_rows``): each
+fuse-group queue is bounded — a ``submit()`` that would push a queue past
+the limit raises :class:`QueueFullError` immediately (the front door maps
+it to HTTP 429 + ``Retry-After``) instead of growing an unbounded backlog.
+**Deadlines** (``SampleRequest.deadline_ms``): a request still queued past
+its deadline fails fast with :class:`DeadlineExceededError` at the next
+drain pass — it never occupies a seat in a fused batch it can no longer
+use.  Both are pure queue policy: neither affects any admitted request's
+results.
 
 Execution goes through the same thread-safe
 :class:`~repro.serving.executor.FusedExecutor` as the sync path, so the
@@ -44,6 +57,7 @@ from collections import deque
 from concurrent.futures import Future
 from typing import Callable
 
+from repro.serving import result_keys as K
 from repro.serving.diffusion_sampler import BatchedSampler
 from repro.serving.executor import (
     QueueItem,
@@ -51,6 +65,36 @@ from repro.serving.executor import (
     SampleResult,
     resolve_future,
 )
+
+
+class QueueFullError(RuntimeError):
+    """Admission control rejected a submit: the request's fuse-group queue
+    is at ``SchedulerPolicy.max_queue_rows``.  ``retry_after_s`` is the
+    server's backoff hint (the front door sends it as ``Retry-After``)."""
+
+    def __init__(self, key, rows: int, limit: int, retry_after_s: float):
+        self.key = key
+        self.rows = rows
+        self.limit = limit
+        self.retry_after_s = retry_after_s
+        super().__init__(
+            f"queue {key} is full ({rows} rows >= limit {limit}); "
+            f"retry in {retry_after_s:.1f}s"
+        )
+
+
+class DeadlineExceededError(RuntimeError):
+    """A request spent longer than its ``deadline_ms`` in the queue and was
+    failed fast instead of boarding a fused batch it can no longer use."""
+
+    def __init__(self, req: SampleRequest, waited_ms: float):
+        self.req = req
+        self.waited_ms = waited_ms
+        super().__init__(
+            f"request (seed={req.seed}, solver={req.solver or 'default'}) "
+            f"expired in queue: waited {waited_ms:.1f}ms > "
+            f"deadline_ms={req.deadline_ms:g}"
+        )
 
 
 def open_loop(gaps, emit, clock=time.perf_counter, sleep=time.sleep) -> float:
@@ -83,10 +127,16 @@ class SchedulerPolicy:
       at which a queue launches immediately instead of waiting out the
       deadline.  1.0 waits for a completely full bucket; 0.25 launches as
       soon as a quarter-bucket of rows is pending.
+    * ``max_queue_rows`` — admission bound per fuse-group queue: a submit
+      that would push a queue's pending rows past this raises
+      :class:`QueueFullError` (HTTP 429 at the front door) instead of
+      queueing.  ``None`` = unbounded (in-process callers that manage
+      their own backpressure).
     """
 
     max_wait_ms: float = 10.0
     target_occupancy: float = 1.0
+    max_queue_rows: int | None = None
 
     def target_rows(self, max_bucket: int | None) -> int | None:
         """Row count that triggers an immediate launch (None = deadline
@@ -105,6 +155,12 @@ class SchedulerPolicy:
         if target is not None and rows >= target:
             return True
         return now >= self.deadline(oldest_t)
+
+    def retry_after_s(self) -> float:
+        """Backoff hint for an admission-rejected client: by the time one
+        launch deadline has passed, the rejected queue has had a chance to
+        drain at least once."""
+        return max(1.0, self.max_wait_ms / 1e3)
 
 
 class AsyncBatchedSampler:
@@ -154,29 +210,78 @@ class AsyncBatchedSampler:
         # for its whole lifetime — no per-batch history is kept)
         self._batches = 0
         self._rows = 0
+        # Prometheus-style instruments, registered into the shared executor
+        # registry (get-or-create: front doors and sync drains scrape the
+        # same /metrics)
+        m = engine.executor.metrics
+        self._m_depth = m.gauge(
+            "sampler_queue_depth_rows",
+            "pending request rows per fuse-group queue (solver, seq, nfe)",
+        )
+        self._m_submitted = m.counter(
+            "sampler_requests_submitted_total", "requests admitted by submit()"
+        )
+        self._m_rejects = m.counter(
+            "sampler_admission_rejects_total",
+            "submits rejected by the max_queue_rows admission bound",
+        )
+        self._m_expired = m.counter(
+            "sampler_deadline_expired_total",
+            "queued requests failed fast past their deadline_ms",
+        )
+        self._m_latency = m.histogram(
+            "sampler_request_latency_seconds",
+            "arrival-to-result latency per delivered request",
+        )
 
     # ---- client surface -------------------------------------------------
     def submit(self, req: SampleRequest) -> Future:
         """Enqueue from any thread; never blocks on execution (the drain
         thread runs batches).  The returned Future resolves to a
         :class:`~repro.serving.executor.SampleResult` (or raises, if the
-        fused launch it rode in failed); ``Future.result(timeout=...)`` is
-        the blocking wait.  Invalid requests — unknown solver, per-solver
-        (batch, nfe) constraints, seq_len above the engine's largest seq
-        bucket — raise here, at submit, so they can never poison a fused
-        batch.  Raises RuntimeError after ``stop()``."""
+        fused launch it rode in failed, or with
+        :class:`DeadlineExceededError` if the request expired in queue);
+        ``Future.result(timeout=...)`` is the blocking wait.  Invalid
+        requests — unknown solver, per-solver (batch, nfe) constraints,
+        seq_len above the engine's largest seq bucket, bad
+        priority/deadline — raise here, at submit, so they can never
+        poison a fused batch.  Raises :class:`QueueFullError` when the
+        request's fuse-group queue is at the policy's admission bound, and
+        RuntimeError after ``stop()``."""
         self.engine.executor.validate(req)
         fut: Future = Future()
+        key = self.engine.executor.group_key(req)
+        label = self._key_labels(key)
         with self._cv:
             if self._stopping:
                 raise RuntimeError("scheduler is stopped")
+            limit = self.policy.max_queue_rows
+            if limit is not None:
+                q = self._queues.get(key)
+                rows = sum(item[1].batch for item, _ in q) if q else 0
+                if rows + req.batch > limit:
+                    self._m_rejects.inc(**label)
+                    raise QueueFullError(
+                        key, rows, limit, self.policy.retry_after_s()
+                    )
             ticket = self._next_ticket
             self._next_ticket += 1
             item: QueueItem = (ticket, req, self._clock())
-            key = self.engine.executor.group_key(req)
             self._queues.setdefault(key, deque()).append((item, fut))
+            self._m_submitted.inc()
+            self._set_depth_locked(key)
             self._cv.notify()
         return fut
+
+    @staticmethod
+    def _key_labels(key) -> dict:
+        solver, seq, nfe = key
+        return {"solver": solver, "seq": seq, "nfe": nfe}
+
+    def _set_depth_locked(self, key) -> None:
+        q = self._queues.get(key)
+        rows = sum(item[1].batch for item, _ in q) if q else 0
+        self._m_depth.set(rows, **self._key_labels(key))
 
     @property
     def pending(self) -> int:
@@ -188,10 +293,10 @@ class AsyncBatchedSampler:
             batches, rows = self._batches, self._rows
             submitted = self._next_ticket
         return {
-            "submitted": submitted,
-            "batches": batches,
-            "rows": rows,
-            "mean_batch_rows": (rows / batches) if batches else 0.0,
+            K.SUBMITTED: submitted,
+            K.BATCHES: batches,
+            K.ROWS: rows,
+            K.MEAN_BATCH_ROWS: (rows / batches) if batches else 0.0,
         }
 
     # ---- lifecycle (one-shot: stop() is final; build a new scheduler to
@@ -222,8 +327,11 @@ class AsyncBatchedSampler:
             thread.join()
         else:
             # never started: flush synchronously so no future is orphaned
+            now = self._clock()
             with self._cv:
+                expired = self._expire_locked(now)
                 batches = self._pop_all()
+            self._fail_expired(expired, now)
             self._run_batches(batches)
 
     def __enter__(self) -> "AsyncBatchedSampler":
@@ -234,27 +342,65 @@ class AsyncBatchedSampler:
 
     # ---- scheduling core (fake-clock testable, no thread required) ------
     def drain_once(self, now: float | None = None) -> int:
-        """Launch every queue the policy deems ready at ``now``; returns the
-        number of fused batches launched.  This is the drain thread's step
-        function, exposed for manual pumping and fake-clock tests."""
+        """Fail every queued request past its deadline, then launch every
+        queue the policy deems ready at ``now``; returns the number of
+        fused batches launched.  This is the drain thread's step function,
+        exposed for manual pumping and fake-clock tests."""
         with self._cv:
-            batches = self._pop_ready(self._clock() if now is None else now)
+            t = self._clock() if now is None else now
+            expired = self._expire_locked(t)
+            batches = self._pop_ready(t)
+        self._fail_expired(expired, t)
         return self._run_batches(batches)
 
+    def _expire_locked(self, now: float):
+        """Remove deadline-expired requests from every queue (fail-fast:
+        they never occupy a fused batch).  Returns the removed entries for
+        delivery outside the lock."""
+        expired: list[tuple[QueueItem, Future]] = []
+        for key, q in self._queues.items():
+            if not q:
+                continue
+            keep = deque()
+            for entry in q:
+                (_, req, t_submit), _ = entry
+                if (
+                    req.deadline_ms is not None
+                    and now - t_submit > req.deadline_ms / 1e3
+                ):
+                    expired.append(entry)
+                else:
+                    keep.append(entry)
+            if len(keep) != len(q):
+                self._queues[key] = keep
+                self._set_depth_locked(key)
+        return expired
+
+    def _fail_expired(self, expired, now: float) -> None:
+        for (_, req, t_submit), fut in expired:
+            self._m_expired.inc()
+            resolve_future(
+                fut,
+                exception=DeadlineExceededError(req, (now - t_submit) * 1e3),
+            )
+
     def _pop_ready(self, now: float):
-        """Pop ready chunks under the lock, oldest-queue-first."""
+        """Pop ready chunks under the lock: highest-priority queue first
+        (a queue's priority is its most urgent pending request's), oldest
+        arrival breaking ties."""
         exe = self.engine.executor
-        ready: list[tuple[float, tuple[str, int, int]]] = []
+        ready: list[tuple[int, float, tuple[str, int, int]]] = []
         for key, q in self._queues.items():
             if not q:
                 continue
             rows = sum(item[1].batch for item, _ in q)
             oldest = q[0][0][2]
             if self.policy.should_launch(now, oldest, rows, exe.max_bucket):
-                ready.append((oldest, key))
-        ready.sort()  # deadline promotion: oldest arrival served first
+                prio = max(item[1].priority for item, _ in q)
+                ready.append((-prio, oldest, key))
+        ready.sort()
         batches = []
-        for _, key in ready:
+        for _, _, key in ready:
             batches.extend(self._pop_chunks(key, full_queue=False))
         return batches
 
@@ -265,25 +411,39 @@ class AsyncBatchedSampler:
         return batches
 
     def _pop_chunks(self, key, full_queue: bool):
-        """Take rows from one queue: up to one largest bucket per launch
-        (the remainder keeps its arrival times), or the whole queue on
-        flush.  Non-fusable configs split into exact-size solo chunks."""
+        """Take rows from one queue: up to one largest bucket per launch,
+        boarding higher-``priority`` requests first (FIFO among equal
+        priorities — with no priorities set this is exactly arrival
+        order); the remainder keeps its arrival times for the next launch.
+        On flush the whole queue goes.  Non-fusable configs split into
+        exact-size solo chunks."""
         exe = self.engine.executor
-        q = self._queues[key]
-        taken: list[tuple[QueueItem, Future]] = []
+        entries = list(self._queues[key])
+        order = sorted(
+            range(len(entries)),
+            key=lambda i: (-entries[i][0][1].priority, i),
+        )
+        taken_idx: list[int] = []
         total = 0
-        while q:
-            b = q[0][0][1].batch
+        for i in order:
+            b = entries[i][0][1].batch
             if (
                 not full_queue
-                and taken
+                and taken_idx
                 and exe.max_bucket
                 and total + b > exe.max_bucket
             ):
                 break
-            entry = q.popleft()
-            taken.append(entry)
+            taken_idx.append(i)
             total += b
+        taken_set = set(taken_idx)
+        # chunks assemble in boarding (priority) order; leftovers keep
+        # their original arrival order and times
+        taken = [entries[i] for i in taken_idx]
+        self._queues[key] = deque(
+            e for i, e in enumerate(entries) if i not in taken_set
+        )
+        self._set_depth_locked(key)
         futures = {item[0]: fut for item, fut in taken}
         return [
             (key, chunk, pad, futures)
@@ -307,32 +467,43 @@ class AsyncBatchedSampler:
                 self._batches += 1
                 self._rows += sum(req.batch for _, req, _ in chunk)
             for ticket, _, _ in chunk:
+                self._m_latency.observe(results[ticket].latency_s)
                 resolve_future(futures[ticket], results[ticket])
         return len(batches)
 
     def _next_deadline_s(self, now: float) -> float | None:
-        """Seconds until the nearest queue deadline (None = nothing queued)."""
-        deadlines = [
-            self.policy.deadline(q[0][0][2])
-            for q in self._queues.values()
-            if q
-        ]
+        """Seconds until the nearest wakeup: a queue's launch deadline or a
+        request's expiry deadline, whichever comes first (None = nothing
+        queued)."""
+        deadlines = []
+        for q in self._queues.values():
+            if not q:
+                continue
+            deadlines.append(self.policy.deadline(q[0][0][2]))
+            for (_, req, t_submit), _ in q:
+                if req.deadline_ms is not None:
+                    deadlines.append(t_submit + req.deadline_ms / 1e3)
         if not deadlines:
             return None
         return max(0.0, min(deadlines) - now)
 
     def _loop(self) -> None:
         while True:
+            batches, expired, now = [], [], self._clock()
             with self._cv:
                 while not self._stopping:
                     now = self._clock()
+                    expired = self._expire_locked(now)
                     batches = self._pop_ready(now)
-                    if batches:
+                    if batches or expired:
                         break
                     self._cv.wait(timeout=self._next_deadline_s(now))
                 stopping = self._stopping
                 if stopping:
+                    now = self._clock()
+                    expired.extend(self._expire_locked(now))
                     batches = self._pop_all()
+            self._fail_expired(expired, now)
             self._run_batches(batches)
             if stopping:
                 return

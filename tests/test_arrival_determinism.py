@@ -126,7 +126,7 @@ def _solo_x0(reqs, mesh=None):
         solver_config=ERAConfig(per_sample=True),
         mesh=mesh,
     )
-    return [np.asarray(svc.sample(None, r)[0]) for r in reqs]
+    return [np.asarray(svc.sample(None, r).x0) for r in reqs]
 
 
 @settings(max_examples=4, deadline=None)

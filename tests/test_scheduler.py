@@ -17,6 +17,7 @@ from repro.serving import (
     BatchedSampler,
     SampleRequest,
     SchedulerPolicy,
+    result_keys as K,
 )
 
 D_MODEL = OracleDenoiser.D_MODEL
@@ -195,7 +196,7 @@ def test_lone_request_is_not_starved(analytic):
         fut = sched.submit(req(seed=42))
         res = fut.result(timeout=60)
     assert res.x0.shape == (1, 6, D_MODEL)
-    assert sched.stats()["batches"] == 1
+    assert sched.stats()[K.BATCHES] == 1
 
 
 def test_concurrent_submit_stress_no_lost_or_duplicate_tickets(analytic):

@@ -30,6 +30,7 @@ from repro.serving import (
     BatchedSampler,
     SampleRequest,
     SamplerService,
+    result_keys as K,
 )
 
 # module-level: the shim's `given` produces zero-arg tests, so no fixtures
@@ -176,10 +177,10 @@ def test_padded_seq_len_surfaced_in_results_and_facade_info():
         ANALYTIC.schedule,
         solver_config=ERAConfig(per_sample=True),
     )
-    x0, info = svc.sample(None, SampleRequest(batch=2, seq_len=6, nfe=6))
-    assert info["padded_seq_len"] == 6  # facade runs exact-shape
-    assert info["padded_batch"] == 2
-    assert x0.shape == (2, 6, OracleDenoiser.D_MODEL)
+    res = svc.sample(None, SampleRequest(batch=2, seq_len=6, nfe=6))
+    assert res.info[K.PADDED_SEQ_LEN] == 6  # facade runs exact-shape
+    assert res.info[K.PADDED_BATCH] == 2
+    assert res.x0.shape == (2, 6, OracleDenoiser.D_MODEL)
 
 
 def test_unmaskable_denoiser_falls_back_to_exact_shape():

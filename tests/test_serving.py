@@ -1,6 +1,7 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.configs import get_config
 from repro.core import ERAConfig, linear_schedule
@@ -13,6 +14,7 @@ from repro.serving import (
     ServeConfig,
     cache_slots,
     resolve_window,
+    result_keys as K,
 )
 
 KEY = jax.random.PRNGKey(0)
@@ -97,7 +99,7 @@ def test_sampler_service_solver_choice():
     for solver in ("ddim", "era"):
         sc = ERAConfig(nfe=6, k=3) if solver == "era" else None
         svc = SamplerService(dlm, sched, solver, sc)
-        x0, info = svc.sample(params, SampleRequest(batch=2, seq_len=8, nfe=6))
+        x0 = svc.sample(params, SampleRequest(batch=2, seq_len=8, nfe=6)).x0
         assert x0.shape == (2, 8, cfg.d_model)
         assert not bool(jnp.any(jnp.isnan(x0)))
         outs[solver] = np.asarray(x0)
@@ -111,10 +113,15 @@ def test_sampler_service_surfaces_engine_telemetry():
     dlm = DiffusionLM(build_model(cfg))
     params = dlm.init(KEY)
     svc = SamplerService(dlm, linear_schedule(), "era", ERAConfig(nfe=6, k=3))
-    x0, info = svc.sample(params, SampleRequest(batch=2, seq_len=8, nfe=6))
-    assert info["padded_batch"] == 2  # exact-size facade buckets
-    assert info["latency_s"] >= info["wall_s"] > 0
-    assert "delta_eps_history" in info
+    res = svc.sample(params, SampleRequest(batch=2, seq_len=8, nfe=6))
+    info = res.info
+    assert info[K.PADDED_BATCH] == 2  # exact-size facade buckets
+    assert info[K.LATENCY_S] >= info[K.WALL_S] > 0
+    assert K.DELTA_EPS_HISTORY in info
+    # the pre-unification tuple unpacking still works, with a warning
+    with pytest.warns(DeprecationWarning, match="tuple unpacking"):
+        x0, info2 = res
+    assert x0 is res.x0 and set(info2) == set(info)
 
 
 def test_sample_program_lowerable():

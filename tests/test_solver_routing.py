@@ -147,9 +147,9 @@ def test_sampler_service_routes_request_solver(analytic):
     """The facade serves a request naming a different solver than its own
     default — per-request routing reaches the one-call surface too."""
     svc = SamplerService(OracleDenoiser(analytic), analytic.schedule, "era")
-    x0, _ = svc.sample(
+    x0 = svc.sample(
         None, SampleRequest(batch=2, seq_len=6, nfe=8, solver="ddim", seed=5)
-    )
+    ).x0
     ref = get_solver("ddim")(
         analytic.eps, _x_init(5, 2), analytic.schedule,
         default_config("ddim", nfe=8),
