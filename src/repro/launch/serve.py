@@ -166,7 +166,9 @@ def run_listen(dlm, params, args) -> None:
     policy = SchedulerPolicy(
         max_wait_ms=args.max_wait_ms,
         target_occupancy=args.occupancy,
-        max_queue_rows=args.max_queue_rows,
+        max_queue_rows=(
+            args.max_queue_rows if args.max_queue_rows > 0 else None
+        ),
     )
     door = serve_frontdoor(
         engine, params, policy, host=args.host, port=args.port
@@ -256,9 +258,9 @@ def main() -> None:
         help="--connect per-request socket timeout in seconds",
     )
     ap.add_argument(
-        "--max-queue-rows", type=int, default=None,
+        "--max-queue-rows", type=int, default=4096,
         help="--listen admission bound per fuse-group queue (HTTP 429 "
-        "past it; default unbounded)",
+        "past it; default 4096, <= 0 for unbounded)",
     )
     ap.add_argument(
         "--no-warm", dest="warm", action="store_false",

@@ -11,7 +11,16 @@ from repro.serving.diffusion_sampler import (
     fused_path_ok,
 )
 from repro.serving.engine import Engine, ServeConfig, cache_slots, resolve_window
-from repro.serving.executor import FusedExecutor, SampleRequest, SampleResult
+from repro.serving.executor import (
+    DEFAULT_MAX_BATCH,
+    DEFAULT_MAX_NFE,
+    DEFAULT_MAX_SEQ_LEN,
+    SEED_MAX,
+    SEED_MIN,
+    FusedExecutor,
+    SampleRequest,
+    SampleResult,
+)
 from repro.serving.factory import EngineConfig, build_engine, make_solver_config
 from repro.serving.frontdoor import (
     SCHEMA_VERSION,
@@ -34,7 +43,12 @@ from repro.serving.scheduler import (
 )
 
 __all__ = [
+    "DEFAULT_MAX_BATCH",
+    "DEFAULT_MAX_NFE",
+    "DEFAULT_MAX_SEQ_LEN",
     "SCHEMA_VERSION",
+    "SEED_MAX",
+    "SEED_MIN",
     "AsyncBatchedSampler",
     "BatchedSampler",
     "DeadlineExceededError",

@@ -62,6 +62,9 @@ from repro.core import NoiseSchedule, SolverConfig, get_program
 from repro.core import era as era_mod
 from repro.models.diffusion import DiffusionLM
 from repro.serving.executor import (
+    DEFAULT_MAX_BATCH,
+    DEFAULT_MAX_NFE,
+    DEFAULT_MAX_SEQ_LEN,
     FusedExecutor,
     QueueItem,
     SampleRequest,
@@ -104,10 +107,14 @@ class BatchedSampler:
         mesh: Mesh | None = None,
         seq_buckets: tuple[int, ...] | None = None,
         metrics: MetricsRegistry | None = None,
+        max_batch: int | None = DEFAULT_MAX_BATCH,
+        max_nfe: int | None = DEFAULT_MAX_NFE,
+        max_seq_len: int | None = DEFAULT_MAX_SEQ_LEN,
     ):
         self.executor = FusedExecutor(
             dlm, schedule, solver, solver_config, batch_buckets, mesh,
             seq_buckets=seq_buckets, metrics=metrics,
+            max_batch=max_batch, max_nfe=max_nfe, max_seq_len=max_seq_len,
         )
         self._queue_lock = threading.Lock()
         self._pending: list[QueueItem] = []

@@ -77,6 +77,24 @@ from repro.serving.metrics import MetricsRegistry
 
 Array = jax.Array
 
+#: ``jax.random.PRNGKey`` folds the seed into an int64 — anything outside
+#: this range raises OverflowError at *drain* time, inside a fused batch,
+#: which would fail every co-batched request.  validate() rejects it at
+#: submit instead (JSON ints are unbounded, so the wire can send anything).
+SEED_MIN = -(2**63)
+SEED_MAX = 2**63 - 1
+
+#: Server-side ceilings on the wire-exposed resource fields.  Without
+#: them a single request (``batch=10**8``, ``nfe=10**7``, or an enormous
+#: ``seq_len`` on an engine with no seq-bucket ladder) forces a multi-GB
+#: host allocation, a pathological XLA compile, or an unbounded jit cache
+#: at drain time — after admission, where the failure takes down
+#: batch-mates.  Engines accept ``None`` to opt out (trusted in-process
+#: callers); the defaults are far above every serving shape in the repo.
+DEFAULT_MAX_BATCH = 4096
+DEFAULT_MAX_NFE = 1000
+DEFAULT_MAX_SEQ_LEN = 8192
+
 
 @dataclasses.dataclass(frozen=True)
 class SampleRequest:
@@ -85,10 +103,12 @@ class SampleRequest:
     Immutable and hashable — safe to share across threads, reuse for
     resubmission, and use in test fixtures.  Requests are validated at
     ``submit()`` (never at drain time): unknown ``solver`` names, per-solver
-    ``(batch, nfe)`` constraints, and — when the engine has seq buckets —
-    ``seq_len`` above the largest bucket are all rejected there, so an
-    invalid request can never poison a fused batch for its co-batched
-    neighbours.
+    ``(batch, nfe)`` constraints, seeds outside the int64 range
+    ``PRNGKey`` accepts, the engine's ``max_batch`` / ``max_nfe`` /
+    ``max_seq_len`` resource ceilings, and — when the engine has seq
+    buckets — ``seq_len`` above the largest bucket are all rejected there,
+    so an invalid request can never poison a fused batch for its
+    co-batched neighbours.
 
     ``seed`` fully determines the request's initial noise: ``x_T`` is drawn
     as ``jax.random.normal(PRNGKey(seed), (batch, seq_len, d_model))``
@@ -229,8 +249,14 @@ class FusedExecutor:
         mesh: Mesh | None = None,
         seq_buckets: tuple[int, ...] | None = None,
         metrics: MetricsRegistry | None = None,
+        max_batch: int | None = DEFAULT_MAX_BATCH,
+        max_nfe: int | None = DEFAULT_MAX_NFE,
+        max_seq_len: int | None = DEFAULT_MAX_SEQ_LEN,
     ):
         self.dlm = dlm
+        self.max_batch = max_batch
+        self.max_nfe = max_nfe
+        self.max_seq_len = max_seq_len
         self.schedule = schedule
         self.solver_name = solver
         # per-solver engine configs: the constructor pins the default
@@ -375,8 +401,17 @@ class FusedExecutor:
         live in each program's ``validate``."""
         if req.batch < 1:
             raise ValueError(f"batch must be >= 1, got {req.batch}")
+        if self.max_batch is not None and req.batch > self.max_batch:
+            raise ValueError(
+                f"batch {req.batch} exceeds the engine's max_batch "
+                f"{self.max_batch}"
+            )
         if req.seq_len < 1:
             raise ValueError(f"seq_len must be >= 1, got {req.seq_len}")
+        if self.max_nfe is not None and req.nfe > self.max_nfe:
+            raise ValueError(
+                f"nfe {req.nfe} exceeds the engine's max_nfe {self.max_nfe}"
+            )
         if self.seq_buckets and req.seq_len > self.seq_buckets[-1]:
             # the bucket ladder is the engine's serving contract: an
             # over-long request would need its own compiled shape, which is
@@ -385,6 +420,26 @@ class FusedExecutor:
                 f"seq_len {req.seq_len} exceeds the largest seq bucket "
                 f"{self.seq_buckets[-1]}; extend seq_buckets or submit "
                 f"requests within the ladder"
+            )
+        if (
+            not self.seq_buckets
+            and self.max_seq_len is not None
+            and req.seq_len > self.max_seq_len
+        ):
+            # no ladder bounds the compile cache here — every distinct
+            # seq_len compiles its own program, so cap the axis outright
+            raise ValueError(
+                f"seq_len {req.seq_len} exceeds the engine's max_seq_len "
+                f"{self.max_seq_len}"
+            )
+        if not isinstance(req.seed, int) or isinstance(req.seed, bool):
+            raise ValueError(f"seed must be an int, got {req.seed!r}")
+        if not SEED_MIN <= req.seed <= SEED_MAX:
+            # PRNGKey(seed) overflows outside int64 — at drain time, inside
+            # a fused batch, failing every co-batched neighbour
+            raise ValueError(
+                f"seed must fit in a signed 64-bit integer "
+                f"({SEED_MIN} <= seed <= {SEED_MAX}), got {req.seed}"
             )
         if not isinstance(req.priority, int) or isinstance(req.priority, bool):
             raise ValueError(

@@ -24,6 +24,11 @@ from repro.core import (
 )
 from repro.models.diffusion import DiffusionLM
 from repro.serving.diffusion_sampler import BatchedSampler
+from repro.serving.executor import (
+    DEFAULT_MAX_BATCH,
+    DEFAULT_MAX_NFE,
+    DEFAULT_MAX_SEQ_LEN,
+)
 from repro.serving.metrics import MetricsRegistry
 
 
@@ -44,6 +49,12 @@ class EngineConfig:
       exact-size, no fusion — the facade's shape).
     * ``seq_buckets`` — opt-in mixed-seq-len fusion ladder (``None`` =
       exact seq_len per fuse group).
+    * ``max_batch`` / ``max_nfe`` / ``max_seq_len`` — per-request resource
+      ceilings enforced at submit (HTTP 400 at the front door): a single
+      wire request must not be able to force a multi-GB allocation or a
+      pathological compile after admission.  ``None`` = unbounded
+      (trusted in-process callers); ``max_seq_len`` applies only when no
+      ``seq_buckets`` ladder already bounds the sequence axis.
     """
 
     solver: str = "era"
@@ -53,6 +64,9 @@ class EngineConfig:
     per_sample: bool = True
     batch_buckets: tuple[int, ...] | None = (1, 8, 64)
     seq_buckets: tuple[int, ...] | None = None
+    max_batch: int | None = DEFAULT_MAX_BATCH
+    max_nfe: int | None = DEFAULT_MAX_NFE
+    max_seq_len: int | None = DEFAULT_MAX_SEQ_LEN
 
 
 def make_solver_config(cfg: EngineConfig) -> SolverConfig:
@@ -88,4 +102,7 @@ def build_engine(
         mesh=mesh,
         seq_buckets=cfg.seq_buckets,
         metrics=metrics,
+        max_batch=cfg.max_batch,
+        max_nfe=cfg.max_nfe,
+        max_seq_len=cfg.max_seq_len,
     )

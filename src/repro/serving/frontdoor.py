@@ -210,7 +210,11 @@ class FrontDoor:
     requests batch together exactly like in-process submits.
 
     ``port=0`` binds an ephemeral port (tests);  :attr:`url` reports the
-    bound address.  ``start()``/``stop()`` (or use as a context manager)
+    bound address.  ``idle_timeout_s`` bounds how long a keep-alive
+    connection may sit idle (or trickle a request) before its handler
+    thread is reclaimed — it never limits an in-flight sample, which
+    blocks on the scheduler Future, not the socket (``None`` = no
+    timeout, trusted clients only).  ``start()``/``stop()`` (or use as a context manager)
     run the accept loop on a daemon thread; ``stop()`` also stops the
     scheduler when the front door owns it
     (:func:`serve_frontdoor` sets that up).
@@ -222,6 +226,7 @@ class FrontDoor:
         host: str = "127.0.0.1",
         port: int = 0,
         owns_scheduler: bool = False,
+        idle_timeout_s: float | None = 30.0,
     ):
         self.scheduler = scheduler
         self._owns_scheduler = owns_scheduler
@@ -232,8 +237,16 @@ class FrontDoor:
         frontdoor = self
 
         class Handler(BaseHTTPRequestHandler):
-            # one fused batch can take seconds; never time a handler out
-            timeout = None
+            # Socket timeout for *reading* a request (the next request
+            # line on a keep-alive connection, or a trickling body).
+            # Without one, every idle persistent connection pins a
+            # handler thread forever — an unbounded thread/socket leak
+            # for any client that doesn't close per request.  The
+            # in-flight sample wait is unaffected: the handler blocks on
+            # the scheduler Future, not the socket, so a fused batch may
+            # take arbitrarily long.  http.server turns a timed-out read
+            # into close_connection, ending the handler cleanly.
+            timeout = idle_timeout_s
             protocol_version = "HTTP/1.1"
 
             def log_message(self, fmt, *args):  # noqa: A003 - BaseHTTP API
@@ -293,6 +306,7 @@ class FrontDoor:
     # ---- request handling ----------------------------------------------
     def _handle(self, handler: BaseHTTPRequestHandler, method: str) -> None:
         route = urlsplit(handler.path).path
+        handler._response_started = False  # set by _respond_text
         try:
             if method == "POST" and route == "/v1/sample":
                 self._handle_sample(handler, route)
@@ -316,6 +330,13 @@ class FrontDoor:
         except BrokenPipeError:
             pass  # client hung up mid-response; nothing to deliver to
         except Exception as e:  # noqa: BLE001 - must answer, not crash
+            if handler._response_started:
+                # a response (possibly a 200) was partially written:
+                # appending a 500 status line here would corrupt the HTTP
+                # stream on this connection — just drop the connection so
+                # the client sees a truncated response, not a forged one
+                handler.close_connection = True
+                return
             try:
                 self._respond_json(
                     handler, route, 500, encode_error("internal", str(e))
@@ -368,6 +389,8 @@ class FrontDoor:
         headers: dict | None = None,
     ) -> None:
         body = text.encode("utf-8")
+        # from here on a failure must not trigger a second status line
+        handler._response_started = True
         handler.send_response(code)
         handler.send_header("Content-Type", content_type)
         handler.send_header("Content-Length", str(len(body)))
@@ -459,13 +482,20 @@ class FrontDoorClient:
             return decode_result(json.loads(raw.decode("utf-8")))
         err = self._error_payload(raw)
         message = err.get("message", f"HTTP {status}")
+        # reconstructed exceptions carry the *server's* message: the queue
+        # key / row counts / waited time live server-side, so the
+        # placeholder attributes here (key=None, waited_ms=nan) must not
+        # leak into what retry paths log
         if status == 429:
             retry = float(headers.get("Retry-After", "1"))
             raise QueueFullError(
-                key=None, rows=-1, limit=-1, retry_after_s=retry
+                key=None, rows=-1, limit=-1, retry_after_s=retry,
+                message=message,
             )
         if status == 504:
-            raise DeadlineExceededError(req, waited_ms=float("nan"))
+            raise DeadlineExceededError(
+                req, waited_ms=float("nan"), message=message
+            )
         if status == 400:
             raise ValueError(message)
         raise RuntimeError(f"front door error {status}: {message}")

@@ -70,28 +70,53 @@ from repro.serving.executor import (
 class QueueFullError(RuntimeError):
     """Admission control rejected a submit: the request's fuse-group queue
     is at ``SchedulerPolicy.max_queue_rows``.  ``retry_after_s`` is the
-    server's backoff hint (the front door sends it as ``Retry-After``)."""
+    server's backoff hint (the front door sends it as ``Retry-After``).
 
-    def __init__(self, key, rows: int, limit: int, retry_after_s: float):
+    ``message`` overrides the formatted text — the wire client rebuilds
+    this exception from a 429 whose body carries the *server's* message
+    (the client has no queue key or row counts of its own), so the
+    override keeps remote diagnostics as informative as in-process ones.
+    """
+
+    def __init__(
+        self,
+        key,
+        rows: int,
+        limit: int,
+        retry_after_s: float,
+        message: str | None = None,
+    ):
         self.key = key
         self.rows = rows
         self.limit = limit
         self.retry_after_s = retry_after_s
         super().__init__(
-            f"queue {key} is full ({rows} rows >= limit {limit}); "
+            message
+            if message is not None
+            else f"queue {key} is full ({rows} rows >= limit {limit}); "
             f"retry in {retry_after_s:.1f}s"
         )
 
 
 class DeadlineExceededError(RuntimeError):
     """A request spent longer than its ``deadline_ms`` in the queue and was
-    failed fast instead of boarding a fused batch it can no longer use."""
+    failed fast instead of boarding a fused batch it can no longer use.
 
-    def __init__(self, req: SampleRequest, waited_ms: float):
+    ``message`` overrides the formatted text — the wire client rebuilds
+    this exception from a 504 whose body carries the server's message
+    (including the actual waited time, which the client cannot know).
+    """
+
+    def __init__(
+        self, req: SampleRequest, waited_ms: float, message: str | None = None
+    ):
         self.req = req
         self.waited_ms = waited_ms
         super().__init__(
-            f"request (seed={req.seed}, solver={req.solver or 'default'}) "
+            message
+            if message is not None
+            else f"request (seed={req.seed}, "
+            f"solver={req.solver or 'default'}) "
             f"expired in queue: waited {waited_ms:.1f}ms > "
             f"deadline_ms={req.deadline_ms:g}"
         )

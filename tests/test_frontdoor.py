@@ -225,6 +225,53 @@ def test_deadline_validated_at_submit():
             engine.submit_with_future(req(priority=bad))
 
 
+def test_seed_validated_at_submit():
+    """A seed PRNGKey cannot fold (outside int64 — JSON ints are
+    unbounded) must be rejected at submit, not explode at drain time
+    inside a fused batch."""
+    engine = make_engine()
+    for bad in (2**63, -(2**63) - 1, 2**200):
+        with pytest.raises(ValueError, match="seed"):
+            engine.submit_with_future(req(seed=bad))
+    for bad in (1.5, "7", True):
+        with pytest.raises(ValueError, match="seed"):
+            engine.submit_with_future(req(seed=bad))
+    # the extremes of the accepted range sample fine
+    for ok in (2**63 - 1, -(2**63)):
+        _, fut = engine.submit_with_future(req(seed=ok))
+        engine.drain(None)
+        assert fut.result().x0.shape == (1, 6, D_MODEL)
+
+
+def test_resource_caps_validated_at_submit():
+    """Server-side maxima on wire-exposed resource fields: an admitted
+    request must never be able to force a multi-GB allocation or an
+    unbounded jit cache at drain."""
+    engine = make_engine(max_batch=4, max_nfe=8, max_seq_len=16)
+    with pytest.raises(ValueError, match="max_batch"):
+        engine.submit_with_future(req(batch=5))
+    with pytest.raises(ValueError, match="max_nfe"):
+        engine.submit_with_future(req(nfe=9))
+    with pytest.raises(ValueError, match="max_seq_len"):
+        engine.submit_with_future(req(seq_len=17))
+    # at the caps everything still runs
+    _, fut = engine.submit_with_future(req(batch=4, nfe=8, seq_len=16))
+    engine.drain(None)
+    assert fut.result().x0.shape == (4, 16, D_MODEL)
+    # a seq-bucket ladder takes over bounding the sequence axis: the
+    # ladder top (not max_seq_len) is the contract
+    bucketed = make_engine(
+        max_seq_len=16, seq_buckets=(8,), batch_buckets=(1, 2)
+    )
+    with pytest.raises(ValueError, match="seq bucket"):
+        bucketed.submit_with_future(req(seq_len=9))
+    # caps are opt-out for trusted in-process callers
+    unbounded = make_engine(max_batch=None, max_nfe=None, max_seq_len=None)
+    _, fut = unbounded.submit_with_future(req(batch=5, nfe=9, seq_len=17))
+    unbounded.drain(None)
+    assert fut.result().x0.shape == (5, 17, D_MODEL)
+
+
 def test_admission_bound_rejects_then_recovers():
     """Burst past max_queue_rows: the overflow submit raises QueueFullError
     (with a retry hint) while admitted requests complete; afterwards the
@@ -337,6 +384,10 @@ def test_wire_deadline_maps_to_504():
         sched.drain_once(now=clk[0])
         th.join(timeout=10)
     assert isinstance(err.get("e"), DeadlineExceededError)
+    # the reconstructed exception carries the server's message (with the
+    # actual waited time), not a client-side "waited nanms" placeholder
+    assert "expired in queue" in str(err["e"])
+    assert "nan" not in str(err["e"])
 
 
 def test_wire_burst_429_while_inflight_completes():
@@ -382,9 +433,13 @@ def test_wire_burst_429_while_inflight_completes():
         assert body["error"]["type"] == "queue_full"
         conn.close()
 
-        # and via the client: the typed exception
-        with pytest.raises(QueueFullError):
+        # and via the client: the typed exception, carrying the *server's*
+        # message (queue key + row counts), not placeholder attributes
+        with pytest.raises(QueueFullError) as ei:
             client.sample(req(seed=10))
+        assert "is full" in str(ei.value)
+        assert "None" not in str(ei.value) and "-1" not in str(ei.value)
+        assert ei.value.retry_after_s >= 1.0
 
         clk[0] = 1.0
         sched.drain_once(now=clk[0])  # in-flight completes
@@ -426,6 +481,129 @@ def test_http_error_mapping(door):
     assert r.status == 404
     assert json.loads(r.read())["error"]["type"] == "not_found"
     conn.close()
+
+
+def test_wire_poison_request_400_not_500(door):
+    """A request that used to explode at drain time (seed past int64 —
+    JSON ints are unbounded — or an allocation-bomb batch/nfe) now gets a
+    400 at admission, and a co-batched innocent request still completes:
+    the 'invalid requests raise at submit' invariant holds on the wire."""
+    client = FrontDoorClient(door.url, timeout=60)
+    out = {}
+
+    def good():
+        out["res"] = client.sample(req(seed=21))
+
+    th = threading.Thread(target=good)
+    th.start()
+    conn = HTTPConnection(door.host, door.port, timeout=30)
+    for field, value in (
+        ("seed", 2**63), ("seed", -(2**63) - 1),
+        ("batch", 10**8), ("nfe", 10**7), ("seq_len", 10**6),
+    ):
+        conn.request(
+            "POST", "/v1/sample",
+            json.dumps({**encode_request(req()), field: value}).encode(),
+        )
+        r = conn.getresponse()
+        body = json.loads(r.read())
+        assert r.status == 400, (field, value)
+        assert body["error"]["type"] == "invalid_request"
+    conn.close()
+    th.join(timeout=60)
+    solo = SamplerService(engine=make_engine()).sample(None, req(seed=21))
+    np.testing.assert_array_equal(np.asarray(solo.x0), out["res"].x0)
+
+
+def test_idle_keepalive_connection_reclaimed():
+    """An idle persistent connection (or one trickling a body) must not
+    pin a handler thread forever: past idle_timeout_s the server closes
+    the socket.  In-flight samples are unaffected — they block on the
+    scheduler Future, not the socket."""
+    import socket
+
+    sched = AsyncBatchedSampler(
+        make_engine(), params=None, policy=SchedulerPolicy(max_wait_ms=5.0)
+    )
+    sched.start()
+    try:
+        with FrontDoor(sched, idle_timeout_s=0.3) as d:
+            # a request on a keep-alive connection still works...
+            conn = HTTPConnection(d.host, d.port, timeout=30)
+            conn.request(
+                "POST", "/v1/sample",
+                json.dumps(encode_request(req(seed=31))).encode(),
+            )
+            r = conn.getresponse()
+            assert r.status == 200
+            r.read()
+            # ...then the idle connection is closed by the server
+            sock = conn.sock
+            sock.settimeout(10)
+            assert sock.recv(1) == b""  # EOF, not a hang
+            conn.close()
+            # raw socket that never sends a request line: same reclaim
+            s = socket.create_connection((d.host, d.port), timeout=10)
+            assert s.recv(1) == b""
+            s.close()
+    finally:
+        sched.stop()
+
+
+class _FakeHandler:
+    """Just enough of BaseHTTPRequestHandler for FrontDoor._handle: records
+    status codes sent, optionally blows up mid-body-write."""
+
+    def __init__(self, path, fail_body_write=False):
+        self.path = path
+        self.headers = {}
+        self.close_connection = False
+        self.codes = []
+        self._fail = fail_body_write
+        outer = self
+
+        class _W:
+            def write(self, data):
+                if outer._fail:
+                    raise ConnectionResetError("peer reset mid-body")
+
+        self.wfile = _W()
+
+    def send_response(self, code):
+        self.codes.append(code)
+
+    def send_header(self, *a):
+        pass
+
+    def end_headers(self):
+        pass
+
+
+def test_partial_response_failure_does_not_append_500():
+    """A socket failure after the 200 status line has been sent must not
+    append a second status line (stream corruption on a keep-alive
+    connection): the server just drops the connection.  A failure *before*
+    any response still gets the 500 body."""
+    sched = AsyncBatchedSampler(
+        make_engine(), params=None, policy=SchedulerPolicy(max_wait_ms=5.0)
+    )
+    door = FrontDoor(sched)
+    try:
+        # mid-write failure: exactly one status line, connection dropped
+        h = _FakeHandler("/healthz", fail_body_write=True)
+        door._handle(h, "GET")
+        assert h.codes == [200]
+        assert h.close_connection is True
+        # pre-response failure: the 500 reply is still sent
+        door.scheduler.stats = lambda: (_ for _ in ()).throw(
+            RuntimeError("boom")
+        )
+        h2 = _FakeHandler("/healthz")
+        door._handle(h2, "GET")
+        assert h2.codes == [500]
+    finally:
+        door._server.server_close()
+        sched.stop()
 
 
 def test_metrics_and_healthz(door):
