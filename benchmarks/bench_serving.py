@@ -502,6 +502,13 @@ FRONTDOOR_REQUIRED_METRICS = (
     "sampler_fuse_occupancy_ratio",
     "sampler_compile_cache_hits_total",
     "sampler_compile_cache_misses_total",
+    "sampler_compile_programs_total",
+    "sampler_compile_seconds",
+    "sampler_warmup_grid_programs",
+    "sampler_warmup_compiled_programs",
+    "sampler_warmup_in_progress",
+    "sampler_warmup_duration_seconds",
+    "sampler_warmup_programs_total",
     "sampler_admission_rejects_total",
     "sampler_request_latency_seconds",
     "frontdoor_http_requests_total",
@@ -554,6 +561,15 @@ def run_frontdoor(out_path: str = "BENCH_frontdoor.json") -> None:
     proc, url = _boot_frontdoor_server(nfe, seq, max_wait_ms=25.0)
     try:
         client = FrontDoorClient(url, timeout=600.0)
+
+        # the ready line means *bound*, not *warm* — the AOT warmup grid
+        # compiles on a background thread behind /readyz.  Wait it out so
+        # t_single anchors on solver time, not the compile wall.
+        t_deadline = time.perf_counter() + 600.0
+        while not client.readyz()["ready"]:
+            if time.perf_counter() > t_deadline:
+                raise RuntimeError(f"server never ready: {client.readyz()}")
+            time.sleep(0.25)
 
         # single-request wire service time anchors the arrival rates
         t_single = float("inf")
@@ -616,6 +632,7 @@ def run_frontdoor(out_path: str = "BENCH_frontdoor.json") -> None:
             raise RuntimeError(f"/metrics is missing instruments: {missing}")
         record["metrics_ok"] = True
         record["healthz"] = client.healthz()["stats"]
+        record["readyz_warmup"] = client.readyz()["warmup"]
     finally:
         proc.terminate()
         proc.wait()

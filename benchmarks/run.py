@@ -19,6 +19,7 @@ def main() -> None:
     from benchmarks import (
         bench_ablation_ers,
         bench_ablation_scale,
+        bench_coldstart,
         bench_error_measure,
         bench_renoise_error,
         bench_serving,
@@ -35,6 +36,7 @@ def main() -> None:
         "renoise_error": bench_renoise_error.run,     # Appendix C
         "walltime": bench_walltime.run,               # Table 7
         "serving": bench_serving.run,                 # batched engine lat/thpt
+        "coldstart": bench_coldstart.run,             # boot: cold vs warmup vs cache
         "roofline": roofline.run,                     # deliverable (g)
     }
     if args.only and args.only not in suites:

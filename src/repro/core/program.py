@@ -10,7 +10,8 @@ solver-specific branches:
   buffers (the Lagrange/Adams eps+t buffers), allocated outside the jitted
   program so the caller can donate them (``donate_argnums``) and XLA
   updates them in place across the whole sampling scan.  Solvers without
-  history state return ``()``.
+  history state return ``()``.  ``abstract_buffers`` is the
+  ``ShapeDtypeStruct`` mirror ahead-of-time compilation lowers against.
 * ``sample_scan(eps_fn, x_init, buffers, schedule, cfg, shardings)`` — the
   single-``lax.scan``(-or-unrolled) XLA program over the step grid.  One
   jit compile covers a whole (sample-shape, nfe) bucket.  Carry
@@ -134,6 +135,40 @@ class SolverProgram:
         history-free solvers).  With ``shardings``, buffers are created
         batch-sharded in place instead of materialized on one device."""
         return ()
+
+    def abstract_buffers(
+        self, x_like, cfg: SolverConfig, shardings=None
+    ) -> tuple[jax.ShapeDtypeStruct, ...]:
+        """Abstract (``ShapeDtypeStruct``) mirror of :meth:`alloc_buffers`
+        — what an ahead-of-time caller lowers against instead of
+        materializing zero buffers.  ``x_like`` may itself be abstract.
+
+        Derived by shape-evaluating the unsharded allocation, so programs
+        never implement it twice.  With ``shardings``, the buffers carry
+        the same placement :meth:`alloc_buffers` commits them to — the
+        ``(eps_buf, t_buf)`` convention every buffered program's
+        ``buffer_init`` follows; a program with a different buffer layout
+        must override this to place them itself."""
+        shapes = jax.eval_shape(
+            lambda x: self.alloc_buffers(x, cfg, None), x_like
+        )
+        if not shapes:
+            return ()
+        if shardings is None:
+            return tuple(
+                jax.ShapeDtypeStruct(s.shape, s.dtype) for s in shapes
+            )
+        placed = (shardings.eps_buf, shardings.t_buf)
+        if len(shapes) != len(placed):
+            raise NotImplementedError(
+                f"{type(self).__name__} allocates {len(shapes)} buffers, "
+                f"not the (eps_buf, t_buf) pair the base abstract_buffers "
+                f"knows how to place — override abstract_buffers"
+            )
+        return tuple(
+            jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=h)
+            for s, h in zip(shapes, placed)
+        )
 
     def carry_pspecs(self, cfg: SolverConfig, mesh, *, batch=None, x_ndim=3):
         """PartitionSpecs for this program's scan carry on ``mesh``."""

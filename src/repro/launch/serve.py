@@ -18,11 +18,14 @@ the run reports p50/p99 arrival-to-result latency, throughput, and how full
 the fused batches ran.
 
 ``--listen`` runs the HTTP front door (``POST /v1/sample``, ``GET
-/metrics``, ``GET /healthz`` — see docs/serving.md) over the same engine
-and scheduler; once the socket is bound it prints the machine-parsable
-ready line ``FRONTDOOR READY <url>`` (``--port 0`` binds an ephemeral
-port) and serves until interrupted.  ``--connect URL`` is the matching
-wire client: it needs no model or params, just the server's URL.
+/metrics``, ``GET /healthz`` liveness, ``GET /readyz`` readiness — see
+docs/serving.md) over the same engine and scheduler; once the socket is
+bound it prints the machine-parsable ready line ``FRONTDOOR READY <url>``
+(``--port 0`` binds an ephemeral port) and serves until interrupted.  The
+AOT warmup grid compiles on a background thread behind ``/readyz``
+(``--no-warm`` to skip; ``--compile-cache-dir`` turns redeploy warmups
+into disk loads).  ``--connect URL`` is the matching wire client: it
+needs no model or params, just the server's URL.
 
 Every diffusion mode builds its engine through
 :func:`repro.serving.build_engine` — the one-shot facade, the continuous
@@ -46,7 +49,6 @@ from repro.models import build_model
 from repro.models.diffusion import DiffusionLM
 from repro.serving import (
     AsyncBatchedSampler,
-    BatchedSampler,
     Engine,
     EngineConfig,
     FrontDoorClient,
@@ -58,13 +60,19 @@ from repro.serving import (
     open_loop,
     result_keys as K,
     serve_frontdoor,
+    warmup_kwargs,
 )
 
 
-def _engine_config(args, per_sample: bool, fused: bool) -> EngineConfig:
+def _engine_config(
+    args, per_sample: bool, fused: bool,
+    warmup_seq_lens: tuple[int, ...] | None = None,
+) -> EngineConfig:
     """CLI args -> the one EngineConfig every diffusion mode builds from.
     ``fused`` engines get the serving bucket ladder; the one-shot facade
-    runs exact-size (no fusion)."""
+    runs exact-size (no fusion).  ``warmup_seq_lens`` names the exact
+    lengths the AOT warmup grid covers when the engine has no seq-bucket
+    ladder (each mode passes the lengths its traffic will use)."""
     seq_buckets = (
         tuple(int(x) for x in args.seq_buckets.split(","))
         if args.seq_buckets
@@ -79,27 +87,29 @@ def _engine_config(args, per_sample: bool, fused: bool) -> EngineConfig:
         per_sample=per_sample,
         batch_buckets=batch_buckets if fused else None,
         seq_buckets=seq_buckets if fused else None,
+        warmup="grid" if (fused and args.warm) else "none",
+        warmup_nfes=(
+            tuple(int(x) for x in args.warmup_nfes.split(","))
+            if args.warmup_nfes
+            else None
+        ),
+        warmup_seq_lens=warmup_seq_lens if fused else None,
+        compile_cache_dir=args.compile_cache_dir,
     )
 
 
-def _warm_engine(engine: BatchedSampler, params, args, mix, lens) -> None:
-    """Compile every (solver, batch bucket, seq group) program before
-    serving — one warmup drain per distinct group so lone requests at any
-    length hit a warm program."""
-    seq_groups = sorted({engine.executor.group_key(
-        SampleRequest(batch=1, seq_len=ln, nfe=args.nfe)
-    )[1] for ln in lens})
-    for solver in mix:
-        for bucket in engine.batch_buckets:
-            for seq in seq_groups:
-                for i in range(bucket):
-                    engine.submit_with_future(
-                        SampleRequest(
-                            batch=1, seq_len=seq, nfe=args.nfe,
-                            solver=solver, seed=10_000 + i,
-                        )
-                    )
-                engine.drain(params)
+def _warm_engine(engine, params, cfg: EngineConfig, mix) -> None:
+    """AOT-compile the engine's program grid for every solver in ``mix``
+    (no sampling — abstract shapes only; see ``BatchedSampler.warmup``)."""
+    kw = warmup_kwargs(cfg)
+    if kw is None:
+        return
+    rep = engine.warmup(params, solvers=tuple(mix), **kw)
+    print(
+        f"warmup: {rep['programs']} programs in {rep['wall_s']:.2f}s "
+        f"({rep['fresh']} fresh, {rep['disk']} from compile cache)",
+        flush=True,
+    )
 
 
 def run_continuous(dlm, params, args) -> None:
@@ -116,10 +126,11 @@ def run_continuous(dlm, params, args) -> None:
         if args.seq_mix_lens
         else [args.seq]
     )
-    engine = build_engine(
-        dlm, linear_schedule(), _engine_config(args, per_sample=True, fused=True)
+    cfg = _engine_config(
+        args, per_sample=True, fused=True, warmup_seq_lens=tuple(lens)
     )
-    _warm_engine(engine, params, args, mix, lens)
+    engine = build_engine(dlm, linear_schedule(), cfg)
+    _warm_engine(engine, params, cfg, mix)
 
     policy = SchedulerPolicy(
         max_wait_ms=args.max_wait_ms, target_occupancy=args.occupancy
@@ -156,13 +167,14 @@ def run_continuous(dlm, params, args) -> None:
 
 def run_listen(dlm, params, args) -> None:
     """HTTP front-door server: bind, print the ready line, serve until
-    interrupted.  Warms the default solver's buckets first so the first
-    wire request doesn't pay a compile."""
-    engine = build_engine(
-        dlm, linear_schedule(), _engine_config(args, per_sample=True, fused=True)
+    interrupted.  The AOT warmup grid (default solver × batch buckets ×
+    seq buckets × nfe) compiles on a background thread — the listener is
+    up immediately, and ``GET /readyz`` flips 503 -> 200 once the grid is
+    in (``--no-warm`` skips it: ready at bind, first requests compile)."""
+    cfg = _engine_config(
+        args, per_sample=True, fused=True, warmup_seq_lens=(args.seq,)
     )
-    if args.warm:
-        _warm_engine(engine, params, args, [args.solver], [args.seq])
+    engine = build_engine(dlm, linear_schedule(), cfg)
     policy = SchedulerPolicy(
         max_wait_ms=args.max_wait_ms,
         target_occupancy=args.occupancy,
@@ -170,11 +182,16 @@ def run_listen(dlm, params, args) -> None:
             args.max_queue_rows if args.max_queue_rows > 0 else None
         ),
     )
+    kw = warmup_kwargs(cfg)
     door = serve_frontdoor(
-        engine, params, policy, host=args.host, port=args.port
+        engine, params, policy, host=args.host, port=args.port,
+        warmup=(
+            {**kw, "solvers": (args.solver,)} if kw is not None else None
+        ),
     )
     # machine-parsable sentinel: bench_serving and tests wait for this
-    # line before opening the client
+    # line before opening the client (bind != ready — poll /readyz for
+    # the end of the compile wall)
     print(f"FRONTDOOR READY {door.url}", flush=True)
     try:
         while True:
@@ -264,7 +281,22 @@ def main() -> None:
     )
     ap.add_argument(
         "--no-warm", dest="warm", action="store_false",
-        help="skip the --listen compile warmup drains",
+        help="skip the AOT warmup grid compile (--listen boots ready "
+        "immediately; first requests pay their own compiles)",
+    )
+    ap.add_argument(
+        "--warmup-nfes",
+        default=None,
+        help="comma-separated NFE list the AOT warmup grid covers "
+        "(default: --nfe only)",
+    )
+    ap.add_argument(
+        "--compile-cache-dir",
+        default=None,
+        metavar="DIR",
+        help="persistent XLA compilation cache directory "
+        "(jax_compilation_cache_dir): warmup on a redeployed replica "
+        "loads yesterday's programs from disk instead of recompiling",
     )
     ap.add_argument("--requests", type=int, default=16)
     ap.add_argument(

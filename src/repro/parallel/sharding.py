@@ -187,6 +187,13 @@ class ParamReplicator:
         self._cached_leaves: list | None = None
         self._placed: Any = None
 
+    @property
+    def sharding(self) -> NamedSharding:
+        """The fully-replicated placement every leaf is committed to —
+        what an AOT caller attaches to its params avals so the compiled
+        program accepts replicated leaves without resharding."""
+        return self._sharding
+
     def __call__(self, params):
         leaves = jax.tree.leaves(params)
         stale = (

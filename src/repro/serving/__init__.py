@@ -5,6 +5,7 @@ from repro.parallel.sharding import (
     sampler_shardings,
 )
 from repro.serving import result_keys
+from repro.serving.compile_cache import configure_persistent_cache, disk_cache_hits
 from repro.serving.diffusion_sampler import (
     BatchedSampler,
     SamplerService,
@@ -21,7 +22,13 @@ from repro.serving.executor import (
     SampleRequest,
     SampleResult,
 )
-from repro.serving.factory import EngineConfig, build_engine, make_solver_config
+from repro.serving.factory import (
+    WARMUP_MODES,
+    EngineConfig,
+    build_engine,
+    make_solver_config,
+    warmup_kwargs,
+)
 from repro.serving.frontdoor import (
     SCHEMA_VERSION,
     FrontDoor,
@@ -67,10 +74,13 @@ __all__ = [
     "SchedulerPolicy",
     "SchemaError",
     "ServeConfig",
+    "WARMUP_MODES",
     "build_engine",
     "cache_slots",
+    "configure_persistent_cache",
     "decode_request",
     "decode_result",
+    "disk_cache_hits",
     "encode_request",
     "encode_result",
     "fused_path_ok",
@@ -81,4 +91,5 @@ __all__ = [
     "sampler_pspecs",
     "sampler_shardings",
     "serve_frontdoor",
+    "warmup_kwargs",
 ]

@@ -260,10 +260,39 @@ class BatchedSampler:
             raise failure
         return results
 
+    # ---- cold start -----------------------------------------------------
+    def warmup(
+        self,
+        params,
+        *,
+        solvers: tuple[str, ...] | None = None,
+        seq_lens: tuple[int, ...] | None = None,
+        nfes: tuple[int, ...] | None = None,
+        progress=None,
+    ):
+        """Ahead-of-time compile the configured (solver × batch-bucket ×
+        seq-bucket × nfe) program grid — no sampling, no drains; see
+        :meth:`FusedExecutor.warmup`.  After this returns, the first real
+        request of any warmed shape runs the solver, not the compiler.
+        Returns the warmup report dict."""
+        return self.executor.warmup(
+            params, solvers=solvers, seq_lens=seq_lens, nfes=nfes,
+            progress=progress,
+        )
+
+    def warmup_status(self):
+        """Warmup progress snapshot (``/readyz`` payload material)."""
+        return self.executor.warmup_status()
+
     # ---- introspection (tests / benchmarks) ----------------------------
     def compile_cache(self):
-        """Bucket-key -> jitted runner map (each compiles exactly once)."""
+        """Bucket-key -> compiled executable map (each program is lowered
+        and compiled exactly once, by warmup or by its first chunk)."""
         return self.executor.compile_cache()
+
+    def compile_stats(self):
+        """Program-acquisition counts by source: fresh / disk / memory."""
+        return self.executor.compile_stats()
 
 
 class SamplerService:

@@ -73,6 +73,7 @@ from repro.parallel.sharding import (
     round_to_dp,
 )
 from repro.serving import result_keys as K
+from repro.serving.compile_cache import disk_cache_hits
 from repro.serving.metrics import MetricsRegistry
 
 Array = jax.Array
@@ -288,12 +289,51 @@ class FusedExecutor:
         self.metrics = metrics if metrics is not None else MetricsRegistry()
         self._m_compile_hits = self.metrics.counter(
             "sampler_compile_cache_hits_total",
-            "fused chunks served by an already-compiled bucket program",
+            "fused chunks served by an already-compiled bucket program "
+            "(in-process executable cache)",
         )
         self._m_compile_misses = self.metrics.counter(
             "sampler_compile_cache_misses_total",
-            "bucket programs compiled (one per (solver, shape) bucket)",
+            "bucket programs built at the lower/compile boundary, labelled "
+            "by source: disk (persistent compilation cache) or fresh "
+            "(real XLA compile)",
         )
+        self._m_compile_programs = self.metrics.counter(
+            "sampler_compile_programs_total",
+            "program acquisitions by source: memory (in-process "
+            "executable cache), disk (persistent compilation cache), "
+            "fresh (real XLA compile)",
+        )
+        self._m_compile_wall = self.metrics.histogram(
+            "sampler_compile_seconds",
+            "wall time of each lower+compile at the AOT boundary",
+            buckets=(0.05, 0.1, 0.25, 0.5, 1.0, 2.5, 5.0, 10.0, 30.0, 60.0),
+        )
+        self._m_warmup_total = self.metrics.gauge(
+            "sampler_warmup_grid_programs",
+            "programs in the configured warmup grid (0 until warmup() runs)",
+        )
+        self._m_warmup_done = self.metrics.gauge(
+            "sampler_warmup_compiled_programs",
+            "warmup grid programs compiled so far",
+        )
+        self._m_warmup_inflight = self.metrics.gauge(
+            "sampler_warmup_in_progress",
+            "1 while warmup() is compiling the grid",
+        )
+        self._m_warmup_wall = self.metrics.gauge(
+            "sampler_warmup_duration_seconds",
+            "wall time of the last completed warmup()",
+        )
+        self._m_warmup_programs = self.metrics.counter(
+            "sampler_warmup_programs_total",
+            "programs compiled by warmup(), by solver",
+        )
+        # plain-python mirror of the source-labelled compile counters, for
+        # callers (tests, bench_coldstart) that want exact counts without
+        # scraping label combinations out of the registry
+        self._compile_counts = {"fresh": 0, "disk": 0, "memory": 0}
+        self._warmup_state: dict[str, Any] = {"state": "none", "done": 0, "total": 0}
         self._m_batches = self.metrics.counter(
             "sampler_batches_total", "fused batches executed"
         )
@@ -582,7 +622,7 @@ class FusedExecutor:
             if lengths is not None:
                 lengths = jax.device_put(lengths, shardings.lengths)
             params = self._replicate(params)
-        run = self._runner(solver, cfg, padded, seq_len, masked)
+        run = self._jit_for(solver, cfg, padded, seq_len, masked, params)
         t0 = time.perf_counter()
         buffers = program.alloc_buffers(x_init, cfg, shardings)
         x0, aux = run(params, x_init, lengths, *buffers)
@@ -613,64 +653,283 @@ class FusedExecutor:
             )
             off += req.batch
 
-    def _runner(
+    def _jit_for(
         self, solver: str, cfg: SolverConfig, batch: int, seq_len: int,
-        masked: bool = False,
+        masked: bool, params,
     ):
-        """One jitted program per (solver, config, padded-batch, seq_len)
-        bucket — with ``seq_len`` a ladder bucket under seq bucketing, so
-        the cache size is bounded by the ladder, not by distinct request
-        lengths.  The per-row ``lengths`` vector is a runtime *argument* of
-        the compiled program (None on unmasked buckets), so any mix of
-        request lengths reuses one executable.
+        """One compiled executable per (solver, config, padded-batch,
+        seq_len) bucket — with ``seq_len`` a ladder bucket under seq
+        bucketing, so the cache size is bounded by the ladder, not by
+        distinct request lengths.  The per-row ``lengths`` vector is a
+        runtime *argument* of the compiled program (None on unmasked
+        buckets), so any mix of request lengths reuses one executable.
+
+        Programs are compiled ahead of time (``lower().compile()`` at this
+        boundary, in :meth:`_compile`) rather than deferred to a lazy
+        ``jax.jit`` wrapper's first call — so ``warmup()`` can populate
+        the same cache from abstract shapes without sampling, and a cache
+        miss here *is* the compile, correctly labelled ``disk`` vs
+        ``fresh``.
 
         Mesh-aware: the key carries the data-parallel size so an engine
         rebuilt on a different mesh never aliases a cached program; it also
         carries ``masked`` so an exact-shape group never aliases a masked
         program of the same shape."""
         key = (solver, cfg, batch, seq_len, self.dp, masked)
-        if key in self._jitted:
+        cached = self._jitted.get(key)
+        if cached is not None:
             self._m_compile_hits.inc(solver=solver)
-        else:
-            self._m_compile_misses.inc(solver=solver)
-        if key not in self._jitted:
-            program = self.program_for(solver)
-            shardings = self._shardings(program, cfg, batch)
-            # eager pre-compile hook: probes that cannot run inside the jit
-            # trace below (ERA's fused-kernel parity gate)
-            program.pre_compile(cfg)
+            self._m_compile_programs.inc(solver=solver, source="memory")
+            self._compile_counts["memory"] += 1
+            return cached
+        compiled, _ = self._compile(key, params)
+        return compiled
 
-            def run(params, x_init, lengths, *buffers):
-                eps_fn = (
-                    self.dlm.eps_fn(params)
-                    if lengths is None
-                    else self.dlm.eps_fn(params, lengths=lengths)
-                )
-                out = program.sample_scan(
-                    eps_fn,
-                    x_init,
-                    buffers,
-                    self.schedule,
-                    cfg,
-                    shardings=shardings,
-                    lengths=lengths,
-                )
-                return out.x0, out.aux
+    def _compile(self, key, params):
+        """Lower and compile one bucket program from abstract shapes — no
+        sampling, no params traffic — and cache the executable under
+        ``key``.  Returns ``(compiled, source)`` with ``source`` ``"disk"``
+        (served by the persistent compilation cache) or ``"fresh"`` (real
+        XLA compile).  Callers hold the executor lock."""
+        solver, cfg, batch, seq_len, _, masked = key
+        program = self.program_for(solver)
+        shardings = self._shardings(program, cfg, batch)
+        # eager pre-compile hook: probes that cannot run inside the jit
+        # trace below (ERA's fused-kernel parity gate)
+        program.pre_compile(cfg)
 
-            # donate x + the program's history buffers so XLA reuses them
-            # in place (CPU ignores donation and would warn, so gate it);
-            # arg 2 (lengths) is never donated
-            nbuf = program.num_buffers(cfg)
-            donate = (
-                (1,) + tuple(range(3, 3 + nbuf))
-                if jax.default_backend() != "cpu"
-                else ()
+        def run(params, x_init, lengths, *buffers):
+            eps_fn = (
+                self.dlm.eps_fn(params)
+                if lengths is None
+                else self.dlm.eps_fn(params, lengths=lengths)
             )
-            self._jitted[key] = jax.jit(run, donate_argnums=donate)
-        return self._jitted[key]
+            out = program.sample_scan(
+                eps_fn,
+                x_init,
+                buffers,
+                self.schedule,
+                cfg,
+                shardings=shardings,
+                lengths=lengths,
+            )
+            return out.x0, out.aux
+
+        # donate x + the program's history buffers so XLA reuses them
+        # in place (CPU ignores donation and would warn, so gate it);
+        # arg 2 (lengths) is never donated
+        nbuf = program.num_buffers(cfg)
+        donate = (
+            (1,) + tuple(range(3, 3 + nbuf))
+            if jax.default_backend() != "cpu"
+            else ()
+        )
+        avals = self._abstract_inputs(
+            program, cfg, batch, seq_len, masked, params, shardings
+        )
+        # XLA exposes no per-call "came from the persistent cache" signal;
+        # the hit counter moving across this compile is that signal
+        disk_before = disk_cache_hits()
+        t0 = time.perf_counter()
+        compiled = jax.jit(run, donate_argnums=donate).lower(*avals).compile()
+        wall = time.perf_counter() - t0
+        source = "disk" if disk_cache_hits() > disk_before else "fresh"
+        self._jitted[key] = compiled
+        self._compile_counts[source] += 1
+        self._m_compile_misses.inc(solver=solver, source=source)
+        self._m_compile_programs.inc(solver=solver, source=source)
+        self._m_compile_wall.observe(wall, solver=solver, source=source)
+        return compiled, source
+
+    def _abstract_inputs(
+        self, program, cfg, batch, seq_len, masked, params, shardings
+    ):
+        """``ShapeDtypeStruct`` avals matching exactly what
+        :meth:`_run_chunk_locked` passes the compiled program: the params
+        tree (shapes only — no device traffic), the fused ``x_init``, the
+        per-row ``lengths`` vector (masked buckets only, else None), and
+        the program's history buffers.  On a mesh every aval carries the
+        same NamedSharding the run path commits its array to, so the AOT
+        executable accepts those arrays without resharding."""
+        d = self.dlm.config.d_model
+        sds = jax.ShapeDtypeStruct
+        x = sds(
+            (batch, seq_len, d),
+            jnp.float32,
+            sharding=None if shardings is None else shardings.x,
+        )
+        lengths = None
+        if masked:
+            lengths = sds(
+                (batch,),
+                jnp.int32,
+                sharding=None if shardings is None else shardings.lengths,
+            )
+        p_sharding = None if self._replicate is None else self._replicate.sharding
+        p_avals = jax.tree.map(
+            lambda a: sds(np.shape(a), jnp.result_type(a), sharding=p_sharding),
+            params,
+        )
+        buffers = program.abstract_buffers(x, cfg, shardings)
+        return (p_avals, x, lengths, *buffers)
+
+    # ---- ahead-of-time warmup ------------------------------------------
+    def warmup(
+        self,
+        params,
+        *,
+        solvers: tuple[str, ...] | None = None,
+        seq_lens: tuple[int, ...] | None = None,
+        nfes: tuple[int, ...] | None = None,
+        progress=None,
+    ) -> dict[str, Any]:
+        """Ahead-of-time compile the configured program grid — **no params
+        traffic, no sampling, no drains**: every grid point is lowered from
+        abstract shapes and compiled into the same ``_jitted`` cache live
+        traffic reads, so the first real request of any warmed shape runs
+        the solver, not the compiler.
+
+        Grid, per solver in ``solvers`` (default: the engine's default
+        solver):
+
+        * **nfe**: ``nfes`` (default: the solver config's nfe).
+        * **seq**: the seq-bucket ladder when this solver's traffic
+          seq-buckets (``seq_masked``); otherwise traffic groups by exact
+          seq_len, so the caller names the expected lengths via
+          ``seq_lens`` (falling back to the ladder values as plain
+          lengths, or raising when the engine has neither).
+        * **batch**: the batch-bucket ladder for fusable configs;
+          non-fusable configs run exact-size (their requests compile their
+          own shapes at drain time), so only the smallest legal batch is
+          warmed.
+
+        Every grid point is validated through the program's own request
+        policy first, so an unserveable grid (e.g. ``nfe < k`` for ERA)
+        fails the boot loudly instead of compiling programs no request
+        could ever use.
+
+        ``progress`` (optional ``fn(done, total)``) and the
+        ``sampler_warmup_*`` instruments report progress while compiling —
+        the front door's ``/readyz`` surfaces :meth:`warmup_status`.
+        Returns a report dict: grid size, per-source compile counts
+        (``fresh`` / ``disk`` / ``memory``), wall seconds, and the grid
+        itself.
+        """
+        solver_list = tuple(solvers) if solvers else (self.solver_name,)
+        grid: list[tuple[str, SolverConfig, int, int, bool]] = []
+        seen: set[Any] = set()
+        for solver in solver_list:
+            program = self.program_for(solver)  # unknown solver raises
+            base = self.config_for(solver)
+            masked = self.seq_masked(solver)
+            seqs = (
+                self.seq_buckets
+                if masked
+                else (tuple(seq_lens) if seq_lens else self.seq_buckets)
+            )
+            if not seqs:
+                raise ValueError(
+                    f"warmup needs seq_lens= when the engine has no "
+                    f"seq-bucket ladder (solver {solver!r} groups by exact "
+                    f"seq_len)"
+                )
+            if self.batch_buckets and program.fusable(base):
+                batches = self.batch_buckets
+            else:
+                # exact-size traffic: warm the smallest legal batch
+                # (requests compile their own exact shapes at drain time)
+                batches = (round_to_dp(1, self.mesh),)
+            for nfe in tuple(nfes) if nfes else (base.nfe,):
+                cfg = dataclasses.replace(base, nfe=nfe)
+                for seq in seqs:
+                    for b in batches:
+                        # an unserveable grid point must fail the boot
+                        # loudly, not compile a program no request can use
+                        program.validate(
+                            SampleRequest(
+                                batch=b, seq_len=seq, nfe=nfe, solver=solver
+                            ),
+                            cfg,
+                            dp=self.dp,
+                        )
+                        point = (solver, cfg, b, seq, masked)
+                        if point not in seen:
+                            seen.add(point)
+                            grid.append(point)
+
+        total = len(grid)
+        counts = {"fresh": 0, "disk": 0, "memory": 0}
+        t0 = time.perf_counter()
+        with self._lock:
+            self._warmup_state = {"state": "running", "total": total, "done": 0}
+        self._m_warmup_total.set(total)
+        self._m_warmup_done.set(0)
+        self._m_warmup_inflight.set(1)
+        done = 0
+        try:
+            for solver, cfg, b, seq, masked in grid:
+                key = (solver, cfg, b, seq, self.dp, masked)
+                with self._lock:
+                    if key in self._jitted:
+                        # already compiled — live traffic got there first
+                        counts["memory"] += 1
+                    else:
+                        _, source = self._compile(key, params)
+                        counts[source] += 1
+                        self._m_warmup_programs.inc(solver=solver)
+                    done += 1
+                    self._warmup_state["done"] = done
+                self._m_warmup_done.set(done)
+                if progress is not None:
+                    progress(done, total)
+            wall = time.perf_counter() - t0
+            with self._lock:
+                self._warmup_state = {
+                    "state": "done",
+                    "total": total,
+                    "done": done,
+                    K.WALL_S: wall,
+                    **counts,
+                }
+            self._m_warmup_wall.set(wall)
+        except BaseException as e:
+            with self._lock:
+                self._warmup_state = {
+                    "state": "failed",
+                    "total": total,
+                    "done": done,
+                    "error": f"{type(e).__name__}: {e}",
+                }
+            raise
+        finally:
+            self._m_warmup_inflight.set(0)
+        return {
+            "programs": total,
+            K.WALL_S: wall,
+            "grid": [
+                {"solver": s, "batch": b, "seq_len": q, "nfe": c.nfe}
+                for s, c, b, q, _ in grid
+            ],
+            **counts,
+        }
+
+    def warmup_status(self) -> dict[str, Any]:
+        """Warmup progress snapshot (what ``/readyz`` reports): ``state``
+        none|running|done|failed plus done/total counters, and per-source
+        compile counts + wall seconds once done."""
+        with self._lock:
+            return dict(self._warmup_state)
 
     # ---- introspection (tests / benchmarks) ----------------------------
     def compile_cache(self) -> dict[Any, Any]:
-        """Bucket-key -> jitted runner map (each compiles exactly once)."""
+        """Bucket-key -> compiled executable map (each program is lowered
+        and compiled exactly once, by warmup or by its first chunk)."""
         with self._lock:
             return dict(self._jitted)
+
+    def compile_stats(self) -> dict[str, int]:
+        """Program-acquisition counts by source since boot: ``fresh`` XLA
+        compiles, ``disk`` persistent-cache loads, and ``memory``
+        in-process executable-cache hits (one per fused chunk served)."""
+        with self._lock:
+            return dict(self._compile_counts)

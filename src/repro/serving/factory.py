@@ -23,6 +23,7 @@ from repro.core import (
     default_config,
 )
 from repro.models.diffusion import DiffusionLM
+from repro.serving.compile_cache import configure_persistent_cache
 from repro.serving.diffusion_sampler import BatchedSampler
 from repro.serving.executor import (
     DEFAULT_MAX_BATCH,
@@ -30,6 +31,9 @@ from repro.serving.executor import (
     DEFAULT_MAX_SEQ_LEN,
 )
 from repro.serving.metrics import MetricsRegistry
+
+#: legal values of :attr:`EngineConfig.warmup`
+WARMUP_MODES = ("none", "grid")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -55,6 +59,20 @@ class EngineConfig:
       pathological compile after admission.  ``None`` = unbounded
       (trusted in-process callers); ``max_seq_len`` applies only when no
       ``seq_buckets`` ladder already bounds the sequence axis.
+    * ``warmup`` — cold-start policy: ``"grid"`` = callers should AOT
+      pre-compile the configured program grid at boot
+      (:meth:`~repro.serving.diffusion_sampler.BatchedSampler.warmup` with
+      :func:`warmup_kwargs`); ``"none"`` = programs compile lazily at
+      first request.  ``warmup_nfes`` / ``warmup_seq_lens`` extend the
+      grid beyond the defaults (the config's ``nfe``; the seq-bucket
+      ladder, or — for exact-seq-len traffic — the lengths callers expect
+      to serve).
+    * ``compile_cache_dir`` — persistent XLA compilation cache directory
+      (``jax_compilation_cache_dir``, process-global): a redeployed
+      replica's warmup becomes disk loads instead of fresh compiles.  The
+      ``compile_cache_*`` thresholds mirror the ``jax_persistent_cache_*``
+      flags but default to persisting everything — see
+      :func:`~repro.serving.compile_cache.configure_persistent_cache`.
     """
 
     solver: str = "era"
@@ -67,6 +85,12 @@ class EngineConfig:
     max_batch: int | None = DEFAULT_MAX_BATCH
     max_nfe: int | None = DEFAULT_MAX_NFE
     max_seq_len: int | None = DEFAULT_MAX_SEQ_LEN
+    warmup: str = "none"
+    warmup_nfes: tuple[int, ...] | None = None
+    warmup_seq_lens: tuple[int, ...] | None = None
+    compile_cache_dir: str | None = None
+    compile_cache_min_entry_bytes: int = -1
+    compile_cache_min_compile_secs: float = 0.0
 
 
 def make_solver_config(cfg: EngineConfig) -> SolverConfig:
@@ -91,8 +115,26 @@ def build_engine(
 
     ``mesh`` and ``metrics`` are runtime resources, not engine shape, so
     they ride alongside the config rather than inside it (a mesh is not
-    hashable; a registry is per-process state)."""
+    hashable; a registry is per-process state).
+
+    ``cfg.compile_cache_dir`` is applied here (process-global jax config);
+    ``cfg.warmup`` is *policy*, not an action — building an engine never
+    compiles.  Callers run the warmup themselves once params are in hand:
+    ``engine.warmup(params, **warmup_kwargs(cfg))`` (or hand the kwargs to
+    :func:`~repro.serving.frontdoor.serve_frontdoor`, which runs it on a
+    background thread behind ``/readyz``)."""
     cfg = cfg if cfg is not None else EngineConfig()
+    if cfg.warmup not in WARMUP_MODES:
+        raise ValueError(
+            f"EngineConfig.warmup must be one of {WARMUP_MODES}, "
+            f"got {cfg.warmup!r}"
+        )
+    if cfg.compile_cache_dir:
+        configure_persistent_cache(
+            cfg.compile_cache_dir,
+            min_entry_size_bytes=cfg.compile_cache_min_entry_bytes,
+            min_compile_time_secs=cfg.compile_cache_min_compile_secs,
+        )
     return BatchedSampler(
         dlm,
         schedule,
@@ -106,3 +148,20 @@ def build_engine(
         max_nfe=cfg.max_nfe,
         max_seq_len=cfg.max_seq_len,
     )
+
+
+def warmup_kwargs(cfg: EngineConfig) -> dict | None:
+    """The ``warmup(...)`` keyword set an :class:`EngineConfig` implies —
+    ``None`` when ``cfg.warmup == "none"`` (don't warm).  Callers with
+    params in hand do::
+
+        kw = warmup_kwargs(cfg)
+        if kw is not None:
+            engine.warmup(params, **kw)
+    """
+    if cfg.warmup == "none":
+        return None
+    return {
+        "nfes": cfg.warmup_nfes or (cfg.nfe,),
+        "seq_lens": cfg.warmup_seq_lens,
+    }

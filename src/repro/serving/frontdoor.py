@@ -19,9 +19,17 @@ parallel wire types.  Endpoints:
   a typed ``deadline_exceeded`` error; validation failures map to **400**.
 * ``GET /metrics`` — the engine's Prometheus text exposition
   (:mod:`repro.serving.metrics`): queue depth per fuse group, fuse
-  occupancy, compile-cache hits/misses, admission rejects, deadline
-  expirations, arrival-to-result latency histogram, HTTP request counts.
-* ``GET /healthz`` — liveness + scheduler stats as JSON.
+  occupancy, compile source counts (memory/disk/fresh) and warmup
+  progress, admission rejects, deadline expirations, arrival-to-result
+  latency histogram, HTTP request counts.
+* ``GET /healthz`` — pure **liveness** + scheduler stats as JSON: 200 as
+  soon as the listener is up, even while programs are still compiling.
+  Wire an LB's health check here only to detect dead processes.
+* ``GET /readyz`` — **readiness**: 503 with warmup progress JSON until
+  the AOT warmup grid is compiled, 200 after (immediately, when the front
+  door was built without a warmup).  Point traffic routing here, so a
+  replica only receives requests once they won't eat a multi-second
+  compile.
 
 :class:`FrontDoorClient` is the matching stdlib client (used by
 ``launch/serve.py --connect`` and ``bench_serving --frontdoor``); it maps
@@ -218,6 +226,15 @@ class FrontDoor:
     run the accept loop on a daemon thread; ``stop()`` also stops the
     scheduler when the front door owns it
     (:func:`serve_frontdoor` sets that up).
+
+    ``warmup`` (a zero-arg callable, typically
+    ``lambda: scheduler.warmup(...)``) gates readiness: ``start()`` runs
+    it on a background daemon thread — the listener binds and ``/healthz``
+    answers immediately — and ``/readyz`` serves 503 with
+    ``scheduler.warmup_status()`` progress until it returns, 200 after.
+    If it raises, the replica stays NOT ready and ``/readyz`` carries the
+    error (a failed warmup on a broken build must not attract traffic).
+    ``None`` (default) = ready from the first byte.
     """
 
     def __init__(
@@ -227,9 +244,16 @@ class FrontDoor:
         port: int = 0,
         owns_scheduler: bool = False,
         idle_timeout_s: float | None = 30.0,
+        warmup=None,
     ):
         self.scheduler = scheduler
         self._owns_scheduler = owns_scheduler
+        self._warmup_fn = warmup
+        self._warmup_thread: threading.Thread | None = None
+        self._warmup_error: str | None = None
+        self._ready = threading.Event()
+        if warmup is None:
+            self._ready.set()
         self._m_http = scheduler.engine.metrics.counter(
             "frontdoor_http_requests_total",
             "HTTP requests served, by route and status code",
@@ -284,7 +308,40 @@ class FrontDoor:
             daemon=True,
         )
         self._thread.start()
+        if self._warmup_fn is not None and self._warmup_thread is None:
+            # warm in the background: the listener is already accepting, so
+            # /healthz (liveness) answers during the compile wall and
+            # /readyz flips 503 -> 200 when the grid is in
+            self._warmup_thread = threading.Thread(
+                target=self._run_warmup, name="era-warmup", daemon=True
+            )
+            self._warmup_thread.start()
         return self
+
+    def _run_warmup(self) -> None:
+        try:
+            self._warmup_fn()
+        except Exception as e:  # noqa: BLE001 - surfaced via /readyz
+            self._warmup_error = f"{type(e).__name__}: {e}"
+        else:
+            self._ready.set()
+
+    @property
+    def ready(self) -> bool:
+        """Has the boot warmup finished (or was none configured)?"""
+        return self._ready.is_set()
+
+    def readiness(self) -> dict:
+        """The ``/readyz`` payload: ``ready`` flag + the scheduler's
+        warmup progress (+ ``error`` if the warmup raised)."""
+        payload = {
+            "v": SCHEMA_VERSION,
+            "ready": self.ready,
+            "warmup": self.scheduler.warmup_status(),
+        }
+        if self._warmup_error is not None:
+            payload["error"] = self._warmup_error
+        return payload
 
     def stop(self) -> None:
         """Stop accepting, join the accept loop, and (when owning it)
@@ -317,10 +374,16 @@ class FrontDoor:
                     METRICS_CONTENT_TYPE,
                 )
             elif method == "GET" and route == "/healthz":
+                # pure liveness: 200 from the first byte, even mid-warmup
                 self._respond_json(
                     handler, route, 200,
                     {"v": SCHEMA_VERSION, "ok": True,
                      "stats": self.scheduler.stats()},
+                )
+            elif method == "GET" and route == "/readyz":
+                payload = self.readiness()
+                self._respond_json(
+                    handler, route, 200 if payload["ready"] else 503, payload
                 )
             else:
                 self._respond_json(
@@ -416,14 +479,31 @@ def serve_frontdoor(
     policy=None,
     host: str = "127.0.0.1",
     port: int = 0,
+    warmup=None,
 ) -> FrontDoor:
     """One-call server bring-up: start a scheduler over ``engine`` and a
     :class:`FrontDoor` that owns it.  ``stop()`` on the returned front
-    door tears both down (flushing queued requests)."""
+    door tears both down (flushing queued requests).
+
+    ``warmup`` gates ``/readyz`` (see :class:`FrontDoor`): a dict is
+    keyword arguments for the scheduler's AOT grid warmup
+    (``scheduler.warmup(solvers=..., seq_lens=..., nfes=...)`` — what
+    :func:`~repro.serving.factory.warmup_kwargs` produces), a callable is
+    run as-is, ``None`` means ready immediately.  Either way the warmup
+    runs on a background thread, so this returns as soon as the listener
+    is bound."""
     scheduler = AsyncBatchedSampler(engine, params, policy).start()
+    warmup_fn = warmup
+    if isinstance(warmup, dict):
+        kw = dict(warmup)
+
+        def warmup_fn():
+            return scheduler.warmup(**kw)
+
     try:
         return FrontDoor(
-            scheduler, host=host, port=port, owns_scheduler=True
+            scheduler, host=host, port=port, owns_scheduler=True,
+            warmup=warmup_fn,
         ).start()
     except Exception:
         scheduler.stop()
@@ -507,7 +587,20 @@ class FrontDoorClient:
         return raw.decode("utf-8")
 
     def healthz(self) -> dict:
+        """GET /healthz — pure liveness (200 even while warming up)."""
         status, _, raw = self._request("GET", "/healthz")
         if status != 200:
             raise RuntimeError(f"/healthz returned HTTP {status}")
         return json.loads(raw.decode("utf-8"))
+
+    def readyz(self) -> dict:
+        """GET /readyz — the readiness payload.  A 503 (still warming, or
+        warmup failed) is a *state*, not a transport error, so both 200
+        and 503 return the parsed payload — check ``payload["ready"]``;
+        any other status raises."""
+        status, _, raw = self._request("GET", "/readyz")
+        if status not in (200, 503):
+            raise RuntimeError(f"/readyz returned HTTP {status}")
+        payload = json.loads(raw.decode("utf-8"))
+        payload["ready"] = bool(payload.get("ready")) and status == 200
+        return payload

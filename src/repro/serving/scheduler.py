@@ -324,6 +324,31 @@ class AsyncBatchedSampler:
             K.MEAN_BATCH_ROWS: (rows / batches) if batches else 0.0,
         }
 
+    # ---- cold start ------------------------------------------------------
+    def warmup(
+        self,
+        *,
+        solvers: tuple[str, ...] | None = None,
+        seq_lens: tuple[int, ...] | None = None,
+        nfes: tuple[int, ...] | None = None,
+        progress=None,
+    ):
+        """Ahead-of-time compile the engine's program grid with this
+        scheduler's bound ``params`` — no sampling, no drains (see
+        :meth:`FusedExecutor.warmup`).  Safe to run concurrently with live
+        traffic (grid points a request compiled first are skipped); the
+        front door runs this on a background thread at boot and gates
+        ``/readyz`` on it."""
+        return self.engine.warmup(
+            self.params, solvers=solvers, seq_lens=seq_lens, nfes=nfes,
+            progress=progress,
+        )
+
+    def warmup_status(self) -> dict:
+        """Warmup progress of the underlying executor (what ``/readyz``
+        reports)."""
+        return self.engine.warmup_status()
+
     # ---- lifecycle (one-shot: stop() is final; build a new scheduler to
     # serve again) ---------------------------------------------------------
     def start(self) -> "AsyncBatchedSampler":

@@ -1,0 +1,61 @@
+"""Subprocess child for the persistent compile-cache round-trip test.
+
+One replica boot: build the Oracle engine through ``build_engine`` with
+``warmup="grid"`` and the shared ``compile_cache_dir`` from argv, run the
+grid warmup, serve one request, and print a JSON record of the warmup
+report / compile-source counters / an x0 checksum.  The parent runs this
+twice against the same cache dir and asserts the second boot's warmup
+came from disk, with bit-identical sampling output.
+"""
+
+import json
+import sys
+
+# sys.path[0] is this script's dir (tests/), so conftest resolves; the
+# parent provides src/ on PYTHONPATH
+from conftest import AnalyticGaussian, OracleDenoiser
+
+from repro.serving import (
+    EngineConfig,
+    SampleRequest,
+    build_engine,
+    warmup_kwargs,
+)
+
+
+def main() -> None:
+    cache_dir = sys.argv[1]
+    analytic = AnalyticGaussian()
+    cfg = EngineConfig(
+        nfe=6,
+        k=3,
+        batch_buckets=(1, 2),
+        seq_buckets=(4, 8),
+        warmup="grid",
+        compile_cache_dir=cache_dir,
+    )
+    engine = build_engine(OracleDenoiser(analytic), analytic.schedule, cfg)
+    report = engine.warmup(None, **warmup_kwargs(cfg))
+
+    _, fut = engine.submit_with_future(
+        SampleRequest(batch=2, seq_len=8, nfe=6, seed=7)
+    )
+    engine.drain(None)
+    x0 = fut.result().x0
+
+    print(
+        json.dumps(
+            {
+                "warmup": {
+                    k: report[k]
+                    for k in ("programs", "fresh", "disk", "memory")
+                },
+                "compile_stats": engine.compile_stats(),
+                "x0_sum": float(x0.sum()),
+            }
+        )
+    )
+
+
+if __name__ == "__main__":
+    main()

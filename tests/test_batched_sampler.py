@@ -171,7 +171,12 @@ def test_compile_once_per_bucket(engine):
     cache = engine.compile_cache()
     assert len(cache) == 1  # batches 1 and 2 share the 2-bucket
     (runner,) = cache.values()
-    assert runner._cache_size() == 1  # jit traced/compiled exactly once
+    # the cache holds AOT-compiled executables, not lazy jit wrappers, so
+    # one entry *is* one compile; the remaining drains were memory hits
+    assert isinstance(runner, jax.stages.Compiled)
+    stats = engine.compile_stats()
+    assert stats["fresh"] + stats["disk"] == 1
+    assert stats["memory"] == 4
 
 
 def test_distinct_buckets_compile_separately(engine):

@@ -618,6 +618,13 @@ def test_metrics_and_healthz(door):
         "sampler_fuse_occupancy_ratio",
         "sampler_compile_cache_hits_total",
         "sampler_compile_cache_misses_total",
+        "sampler_compile_programs_total",
+        "sampler_compile_seconds",
+        "sampler_warmup_grid_programs",
+        "sampler_warmup_compiled_programs",
+        "sampler_warmup_in_progress",
+        "sampler_warmup_duration_seconds",
+        "sampler_warmup_programs_total",
         "sampler_admission_rejects_total",
         "sampler_requests_submitted_total",
         "sampler_request_latency_seconds_bucket",

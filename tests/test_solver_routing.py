@@ -139,8 +139,13 @@ def test_jit_cache_keys_carry_the_solver(engine):
         engine.drain(params=None)
     cache = engine.compile_cache()
     assert sorted(k[0] for k in cache) == ["ddim", "era"]
+    # entries are AOT-compiled executables: one entry == one compile; the
+    # repeat submits above were memory hits, not recompiles
     for runner in cache.values():
-        assert runner._cache_size() == 1
+        assert isinstance(runner, jax.stages.Compiled)
+    stats = engine.compile_stats()
+    assert stats["fresh"] + stats["disk"] == 2
+    assert stats["memory"] == 2
 
 
 def test_sampler_service_routes_request_solver(analytic):
