@@ -510,6 +510,7 @@ FRONTDOOR_REQUIRED_METRICS = (
     "sampler_warmup_duration_seconds",
     "sampler_warmup_programs_total",
     "sampler_admission_rejects_total",
+    "sampler_masked_fallback_total",
     "sampler_request_latency_seconds",
     "frontdoor_http_requests_total",
 )

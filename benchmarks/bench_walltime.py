@@ -1,9 +1,19 @@
 """Paper Table 7: sampling wall time by solver and NFE.  Also isolates the
 solver overhead (Lagrange buffer + selection math) from network-eval time by
 timing against a zero-cost eps function, and compares the fused Pallas ERA
-step (the default) against the pure-jnp combine at serving batch sizes."""
+step (the default) against the pure-jnp combine at serving batch sizes.
+
+``--masked-attn`` runs the masked-vs-unmasked attention sweep instead
+(impls x masked/unmasked x seq buckets) and writes ``BENCH_maskedattn.json``
+— the CI wall that mixed-seq-len kv_mask traffic stays on the fast kernels:
+it FAILS if the masked Pallas path is absent from the sweep or any fast
+impl fell back to chunked during it."""
+
+import argparse
+import json
 
 import jax
+import jax.numpy as jnp
 
 from benchmarks import common as C
 from repro.core import ERAConfig, get_solver
@@ -54,5 +64,126 @@ def run() -> None:
             )
 
 
+def run_masked_attention(out: str = "BENCH_maskedattn.json") -> None:
+    """Masked-vs-unmasked attention sweep: impls x {masked, unmasked} x seq
+    buckets, ragged per-row lengths, on the serving attention shapes.
+
+    Acceptance (hard failures, not warnings):
+      * the masked Pallas path must appear in the sweep, and
+      * no fast impl (pallas / banded) may fire the chunked fallback while
+        the sweep runs — that would mean masked traffic silently left the
+        fast kernels, the regression ``sampler_masked_fallback_total``
+        exists to catch.
+    """
+    from repro.models import attention as A
+
+    b, h, kvh, hd = 4, 4, 2, 64
+    buckets = (64, 128) if C.SMOKE else (128, 256, 512, 1024)
+    fallbacks: list[tuple[str, str]] = []
+    obs = A.register_fallback_observer(
+        lambda impl, reason: fallbacks.append((impl, reason))
+    )
+    rows = []
+    try:
+        for s in buckets:
+            key = jax.random.PRNGKey(s)
+            kq, kk, kv_, kl = jax.random.split(key, 4)
+            q = jax.random.normal(kq, (b, s, h, hd), jnp.float32)
+            k = jax.random.normal(kk, (b, s, kvh, hd), jnp.float32)
+            v = jax.random.normal(kv_, (b, s, kvh, hd), jnp.float32)
+            pos = jnp.arange(s)
+            # ragged mixed-length batch: one full row, the rest scattered
+            lens = jax.random.randint(kl, (b,), s // 4, s + 1).at[0].set(s)
+            mask = pos[None, :] < lens[:, None]
+            for impl in ("pallas", "banded", "chunked"):
+                # banded needs its layout (causal, windowed, s >= 4*window);
+                # pallas/chunked run the denoiser layout (bidirectional)
+                kw = (
+                    dict(window=s // 4, causal=True, protected=2)
+                    if impl == "banded"
+                    else dict(window=0, causal=False)
+                )
+                for masked in (False, True):
+                    fn = jax.jit(
+                        lambda q, k, v, m, i=impl, kws=kw: A.sdpa(
+                            q, k, v, pos, pos, impl=i, kv_mask=m, **kws
+                        )
+                    )
+                    dt = C.timer(fn, q, k, v, mask if masked else None)
+                    tag = "masked" if masked else "unmasked"
+                    rows.append(
+                        {
+                            "impl": impl, "seq_bucket": s, "masked": masked,
+                            "wall_us": dt * 1e6,
+                        }
+                    )
+                    C.emit(
+                        f"maskedattn/{impl}/s{s}/{tag}", dt * 1e6,
+                        f"per_row_us={dt / b * 1e6:.1f}",
+                    )
+    finally:
+        A.unregister_fallback_observer(obs)
+
+    def wall(impl, s, masked):
+        for r in rows:
+            if (r["impl"], r["seq_bucket"], r["masked"]) == (impl, s, masked):
+                return r["wall_us"]
+        return None
+
+    ratios = {}
+    for s in buckets:
+        for impl in ("pallas", "banded", "chunked"):
+            m, u = wall(impl, s, True), wall(impl, s, False)
+            if m and u:
+                ratios[f"{impl}/s{s}/masked_over_unmasked"] = m / u
+        pm, cm = wall("pallas", s, True), wall("chunked", s, True)
+        if pm and cm:
+            ratios[f"s{s}/masked_pallas_over_masked_chunked"] = pm / cm
+
+    record = {
+        "bench": "kernels/maskedattn",
+        "smoke": C.SMOKE,
+        "shape": {"batch": b, "heads": h, "kv_heads": kvh, "head_dim": hd},
+        "seq_buckets": list(buckets),
+        "sweep": rows,
+        "fallbacks": [list(f) for f in fallbacks],
+        "ratios": ratios,
+    }
+    with open(out, "w") as f:
+        json.dump(record, f, indent=2)
+    print(f"# wrote {out}")
+
+    if not any(r["impl"] == "pallas" and r["masked"] for r in rows):
+        raise SystemExit(
+            "masked-attn sweep: masked Pallas path absent from the sweep"
+        )
+    fast_fallbacks = [f for f in fallbacks if f[0] in ("pallas", "banded")]
+    if fast_fallbacks:
+        raise SystemExit(
+            f"masked-attn sweep: fast impls fell back to chunked: "
+            f"{fast_fallbacks} — masked traffic left the fast kernels"
+        )
+    for name, r in ratios.items():
+        if name.endswith("masked_over_unmasked") and r > 3.0:
+            print(
+                f"# WARNING: {name} = {r:.2f}x — masked path shows a "
+                "walltime cliff vs unmasked"
+            )
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument(
+        "--masked-attn", action="store_true",
+        help="run the masked-vs-unmasked attention sweep instead of Table 7",
+    )
+    ap.add_argument("--out", default="BENCH_maskedattn.json")
+    args = ap.parse_args()
+    if args.masked_attn:
+        run_masked_attention(args.out)
+    else:
+        run()
+
+
 if __name__ == "__main__":
-    run()
+    main()

@@ -10,7 +10,13 @@ h reads kv head h // G), so no KV replication is materialized in HBM.
 Masking is positional, matching :func:`repro.kernels.ref.flash_attention_ref`:
 q_pos / kv_pos arrays carry absolute positions (-1 = invalid slot), and
 window/causal/protected (attention-sink) predicates are fused into the
-score block.
+score block.  An optional per-row ``kv_mask`` operand ((B, Sk) int32,
+nonzero = valid key) rides its own BlockSpec into the same score
+predicate, so right-padded mixed-seq-len batches run this kernel instead
+of falling back to chunked SDPA: masked-out keys contribute exp(-inf)=0
+to the online softmax, and a kv block whose keys are all masked leaves
+(acc, m, l) bitwise unchanged — a padded batch's valid positions compute
+exactly the unpadded batch's math.
 """
 
 from __future__ import annotations
@@ -26,20 +32,21 @@ NEG_INF = -1e30
 
 
 def _flash_kernel(
-    # inputs (per BlockSpec)
-    qpos_ref, kpos_ref, q_ref, k_ref, v_ref,
-    # output
-    o_ref,
-    # scratch
-    acc_ref, m_ref, l_ref,
-    *,
+    # inputs (per BlockSpec): qpos, kpos, [kvmask], q, k, v
+    qpos_ref, kpos_ref, *refs,
     scale: float,
     window: int,
     causal: bool,
     softcap: float,
     protected: int,
     nk: int,
+    has_kv_mask: bool,
 ):
+    if has_kv_mask:
+        kvmask_ref, q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref = refs
+    else:
+        kvmask_ref = None
+        q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref = refs
     ik = pl.program_id(2)
 
     @pl.when(ik == 0)
@@ -60,6 +67,8 @@ def _flash_kernel(
     qp = qpos_ref[...][:, None]                         # (bq, 1)
     kp = kpos_ref[...][None, :]                         # (1, bk)
     valid = kp >= 0
+    if kvmask_ref is not None:                          # per-row pad-key mask
+        valid &= kvmask_ref[0][None, :] != 0
     if causal:
         valid &= kp <= qp
     if window > 0:
@@ -102,12 +111,15 @@ def flash_attention(
     block_q: int = 128,
     block_k: int = 128,
     interpret: bool = False,
+    kv_mask: jax.Array | None = None,  # (B, Sk) int32, nonzero = valid key
 ) -> jax.Array:
     """Raw Pallas call: shapes must already be block-aligned (see ops.py)."""
     b, h, sq, hd = q.shape
     kvh, sk = k.shape[1], k.shape[2]
     g = h // kvh
     assert sq % block_q == 0 and sk % block_k == 0, (sq, sk, block_q, block_k)
+    if kv_mask is not None:
+        assert kv_mask.shape == (b, sk), (kv_mask.shape, b, sk)
     nq, nk = sq // block_q, sk // block_k
     grid = (b * h, nq, nk)
 
@@ -122,17 +134,33 @@ def flash_attention(
         softcap=softcap,
         protected=protected,
         nk=nk,
+        has_kv_mask=kv_mask is not None,
     )
+    in_specs = [
+        pl.BlockSpec((block_q,), lambda bh, iq, ik: (iq,)),
+        pl.BlockSpec((block_k,), lambda bh, iq, ik: (ik,)),
+    ]
+    inputs = [q_pos.astype(jnp.int32), kv_pos.astype(jnp.int32)]
+    if kv_mask is not None:
+        # one (1, block_k) row slab per grid step, batch row bh // h
+        in_specs.append(
+            pl.BlockSpec((1, block_k), lambda bh, iq, ik: (bh // h, ik))
+        )
+        inputs.append(kv_mask.astype(jnp.int32))
+    in_specs += [
+        pl.BlockSpec((1, block_q, hd), lambda bh, iq, ik: (bh, iq, 0)),
+        pl.BlockSpec((1, block_k, hd), kv_index),
+        pl.BlockSpec((1, block_k, hd), kv_index),
+    ]
+    inputs += [
+        q.reshape(b * h, sq, hd),
+        k.reshape(b * kvh, sk, hd),
+        v.reshape(b * kvh, sk, hd),
+    ]
     out = pl.pallas_call(
         kernel,
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((block_q,), lambda bh, iq, ik: (iq,)),
-            pl.BlockSpec((block_k,), lambda bh, iq, ik: (ik,)),
-            pl.BlockSpec((1, block_q, hd), lambda bh, iq, ik: (bh, iq, 0)),
-            pl.BlockSpec((1, block_k, hd), kv_index),
-            pl.BlockSpec((1, block_k, hd), kv_index),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, block_q, hd), lambda bh, iq, ik: (bh, iq, 0)),
         out_shape=jax.ShapeDtypeStruct((b * h, sq, hd), q.dtype),
         scratch_shapes=[
@@ -141,11 +169,5 @@ def flash_attention(
             pltpu.VMEM((block_q,), jnp.float32),
         ],
         interpret=interpret,
-    )(
-        q_pos.astype(jnp.int32),
-        kv_pos.astype(jnp.int32),
-        q.reshape(b * h, sq, hd),
-        k.reshape(b * kvh, sk, hd),
-        v.reshape(b * kvh, sk, hd),
-    )
+    )(*inputs)
     return out.reshape(b, h, sq, hd)

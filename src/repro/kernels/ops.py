@@ -49,6 +49,7 @@ def flash_attention(
     q_pos: Array,
     kv_pos: Array,
     *,
+    kv_mask: Array | None = None,  # (B, Sk) bool/int, nonzero = valid key
     window: int = 0,
     causal: bool = True,
     softcap: float = 0.0,
@@ -66,11 +67,16 @@ def flash_attention(
     vt = _pad_to(_pad_to(v.transpose(0, 2, 1, 3), 128, 3), bk, 2)
     qp = _pad_to(q_pos.astype(jnp.int32), bq, 0, value=-(10**9))
     kp = _pad_to(kv_pos.astype(jnp.int32), bk, 0, value=-1)
+    km = (
+        None
+        if kv_mask is None
+        else _pad_to(kv_mask.astype(jnp.int32), bk, 1, value=0)
+    )
     out = _fa.flash_attention(
         qt, kt, vt, qp, kp,
         window=window, causal=causal, softcap=softcap, protected=protected,
         scale=hd**-0.5, block_q=bq, block_k=bk,
-        interpret=_interpret(),
+        interpret=_interpret(), kv_mask=km,
     )
     return out[:, :, :sq, :hd].transpose(0, 2, 1, 3)
 

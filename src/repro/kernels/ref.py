@@ -39,6 +39,7 @@ def flash_attention_ref(
     causal: bool = True,
     softcap: float = 0.0,
     protected: int = 0,
+    kv_mask: Array | None = None,  # (B, Sk), nonzero = valid key
 ) -> Array:
     b, h, sq, hd = q.shape
     kv = k.shape[1]
@@ -48,6 +49,10 @@ def flash_attention_ref(
     if softcap > 0:
         s = softcap * jnp.tanh(s / softcap)
     s = s + _bias(q_pos, kv_pos, window, causal, protected)
+    if kv_mask is not None:  # per-row pad-key mask (mixed-seq-len batches)
+        s = s + jnp.where(kv_mask != 0, 0.0, NEG_INF).astype(jnp.float32)[
+            :, None, None, None, :
+        ]
     w = jax.nn.softmax(s, axis=-1)
     # fully-masked rows (all -inf) -> zeros, matching the kernel
     any_valid = jnp.max(s, axis=-1, keepdims=True) > NEG_INF / 2

@@ -15,6 +15,8 @@ decode all share one code path.
 
 from __future__ import annotations
 
+import warnings
+from typing import Callable
 
 import jax
 import jax.numpy as jnp
@@ -23,6 +25,53 @@ from repro.models import layers as L
 
 Array = jax.Array
 NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# fast-path fallback: loud, observable, and the only place impl is rewritten
+# ---------------------------------------------------------------------------
+
+#: callables ``(impl, reason) -> None`` notified whenever sdpa rewrites a
+#: requested fast impl to chunked.  The serving executor registers one to
+#: drive the ``sampler_masked_fallback_total`` counter — the permanent
+#: canary that fused mixed-length traffic regressed off the fast kernels.
+#: Observers fire at trace time, so each count is a compiled-program
+#: materialization that runs the slow path, not a per-request count.
+_fallback_observers: list[Callable[[str, str], None]] = []
+_warned_fallbacks: set[tuple[str, str]] = set()
+
+
+def register_fallback_observer(fn: Callable[[str, str], None]) -> Callable:
+    _fallback_observers.append(fn)
+    return fn
+
+
+def unregister_fallback_observer(fn: Callable[[str, str], None]) -> None:
+    try:
+        _fallback_observers.remove(fn)
+    except ValueError:
+        pass
+
+
+def _fallback_to_chunked(impl: str, reason: str) -> str:
+    """Rewrite a requested fast impl to ``chunked``: warn once per
+    (impl, reason) and notify every registered observer.  Any config that
+    still can't ride the fast kernels goes through here — never an inline
+    silent rewrite."""
+    key = (impl, reason)
+    if key not in _warned_fallbacks:
+        _warned_fallbacks.add(key)
+        warnings.warn(
+            f"sdpa: requested impl={impl!r} unavailable ({reason}); "
+            "falling back to chunked SDPA. This trades the fused "
+            "fast-attention kernel for the slow path — check "
+            "sampler_masked_fallback_total if this is serving traffic.",
+            RuntimeWarning,
+            stacklevel=3,
+        )
+    for fn in list(_fallback_observers):
+        fn(impl, reason)
+    return "chunked"
 
 
 # ---------------------------------------------------------------------------
@@ -82,6 +131,10 @@ def _naive_sdpa(
     if kv_mask is not None:  # per-row pad-key mask (mixed-seq-len batches)
         scores = scores + _kv_mask_bias(kv_mask)[:, None, None, None, :]
     w = jax.nn.softmax(scores, axis=-1)
+    # fully-masked rows (e.g. an all-pad row) -> zeros, matching the Pallas
+    # kernel and the ref oracle, instead of softmax-of-garbage
+    any_valid = jnp.max(scores, axis=-1, keepdims=True) > NEG_INF / 2
+    w = jnp.where(any_valid, w, 0.0)
     out = jnp.einsum("bkgqs,bskd->bqkgd", w.astype(v.dtype), v)
     return out.reshape(b, sq, h, hd)
 
@@ -129,8 +182,10 @@ def _chunked_sdpa(
         if mc is not None:  # per-row pad-key mask (mixed-seq-len batches)
             s = s + _kv_mask_bias(mj)[:, None, None, None, :]
         m_new = jnp.maximum(m, jnp.max(s, axis=-1))
-        p = jnp.exp(s - m_new[..., None])
-        scale = jnp.exp(m - m_new)
+        # guard both exps below the mask floor so fully-masked rows keep
+        # (acc, l) at exact zero and finalize to zeros (kernel semantics)
+        p = jnp.where(s > NEG_INF / 2, jnp.exp(s - m_new[..., None]), 0.0)
+        scale = jnp.where(m > NEG_INF / 2, jnp.exp(m - m_new), 0.0)
         acc = acc * scale[..., None] + jnp.einsum(
             "bqkgs,bskd->bqkgd", p.astype(vj.dtype), vj
         ).astype(jnp.float32)
@@ -143,7 +198,9 @@ def _chunked_sdpa(
     return out.reshape(b, sq, h, hd).astype(q.dtype)
 
 
-def _banded_sdpa(q, k, v, q_pos, kv_pos, *, window, softcap, chunk, protected):
+def _banded_sdpa(
+    q, k, v, q_pos, kv_pos, *, window, softcap, chunk, protected, kv_mask=None
+):
     """Sliding-window attention that only touches in-band KV blocks.
 
     §Perf optimization: the plain chunked path computes every (q, kv) block
@@ -152,6 +209,8 @@ def _banded_sdpa(q, k, v, q_pos, kv_pos, *, window, softcap, chunk, protected):
     to kv blocks {i-1, i} (which cover the whole (q-W, q] band), plus the
     protected attention-sink prefix.  Requires aligned full-sequence layout
     (q_pos == kv_pos == arange(S)), which is how train/prefill call it.
+    ``kv_mask`` (per-row pad-key mask) is sliced along the same band so
+    right-padded mixed-seq-len batches stay on this fast path.
     """
     b, sq, h, hd = q.shape
     w = window
@@ -163,7 +222,8 @@ def _banded_sdpa(q, k, v, q_pos, kv_pos, *, window, softcap, chunk, protected):
         v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
         q_pos = jnp.pad(q_pos, (0, pad), constant_values=-(10**9))
         kv_pos = jnp.pad(kv_pos, (0, pad), constant_values=-1)
-    sink_k = k[:, :protected] if protected else None
+        if kv_mask is not None:
+            kv_mask = jnp.pad(kv_mask, ((0, 0), (0, pad)))
 
     def block(i):
         qs = jax.lax.dynamic_slice_in_dim(q, i * w, w, axis=1)
@@ -172,6 +232,11 @@ def _banded_sdpa(q, k, v, q_pos, kv_pos, *, window, softcap, chunk, protected):
         ks = jax.lax.dynamic_slice_in_dim(k, lo, 2 * w, axis=1)
         vs = jax.lax.dynamic_slice_in_dim(v, lo, 2 * w, axis=1)
         kp = jax.lax.dynamic_slice_in_dim(kv_pos, lo, 2 * w, axis=0)
+        km = (
+            None
+            if kv_mask is None
+            else jax.lax.dynamic_slice_in_dim(kv_mask, lo, 2 * w, axis=1)
+        )
         if protected:
             # invalidate sink positions inside the band slice (early blocks
             # already cover them) before prepending the dedicated sink copy
@@ -179,10 +244,12 @@ def _banded_sdpa(q, k, v, q_pos, kv_pos, *, window, softcap, chunk, protected):
             ks = jnp.concatenate([k[:, :protected], ks], axis=1)
             vs = jnp.concatenate([v[:, :protected], vs], axis=1)
             kp = jnp.concatenate([kv_pos[:protected], kp], axis=0)
+            if km is not None:
+                km = jnp.concatenate([kv_mask[:, :protected], km], axis=1)
         return _chunked_sdpa(
             qs, ks, vs, qp, kp,
             window=window, causal=True, softcap=softcap,
-            chunk=min(chunk, 2 * w), protected=protected,
+            chunk=min(chunk, 2 * w), protected=protected, kv_mask=km,
         )
 
     outs = [block(jnp.int32(i)) for i in range(nblocks)] if nblocks <= 4 else None
@@ -211,13 +278,17 @@ def sdpa(
 ) -> Array:
     """``kv_mask`` is an optional (B, Sk) per-row key-validity mask — the
     mixed-seq-len serving path marks right-padding pad positions invalid so
-    they get zero attention weight.  Masked calls route through the naive /
-    chunked paths (the banded fast path assumes an aligned full-sequence
-    layout, and the Pallas flash kernel has no per-row mask operand)."""
+    they get zero attention weight.  Every impl takes it natively: the
+    Pallas flash kernel carries it as a BlockSpec operand and the banded
+    fast path slices it along the band, so masked mixed-length batches run
+    the same fast kernels as unmasked ones.  The only remaining rewrite is
+    an explicitly requested ``banded`` whose layout preconditions (causal,
+    windowed, aligned full-sequence) don't hold — that goes through
+    :func:`_fallback_to_chunked`, which warns once and notifies the
+    fallback observers (``sampler_masked_fallback_total``)."""
     sq, sk = q.shape[1], k.shape[1]
     if (
-        kv_mask is None
-        and impl in ("auto", "chunked", "banded")
+        impl in ("auto", "chunked", "banded")
         and causal
         and window > 0
         and sq == sk
@@ -226,11 +297,11 @@ def sdpa(
         return _banded_sdpa(
             q, k, v, q_pos, kv_pos,
             window=window, softcap=softcap, chunk=chunk, protected=protected,
+            kv_mask=kv_mask,
         )
-    if impl in ("pallas", "banded") and kv_mask is not None:
-        # the flash kernel carries no per-row mask operand, and the banded
-        # path assumes an aligned unmasked full-sequence layout
-        impl = "chunked"
+    if impl == "banded":
+        # layout preconditions unmet (non-causal, unwindowed, or sq != sk)
+        impl = _fallback_to_chunked("banded", "banded-layout-unmet")
     if impl == "auto":
         impl = "naive" if sq * sk <= 1024 * 2048 else "chunked"
     if impl == "naive":
@@ -250,7 +321,9 @@ def sdpa(
         from repro.kernels import ops as kops
 
         return kops.flash_attention(
-            q, k, v, q_pos, kv_pos, window=window, causal=causal, softcap=softcap
+            q, k, v, q_pos, kv_pos,
+            window=window, causal=causal, softcap=softcap,
+            protected=protected, kv_mask=kv_mask,
         )
     raise ValueError(f"unknown attention impl {impl!r}")
 

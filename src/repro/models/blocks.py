@@ -118,7 +118,9 @@ def mla_moe_apply(p, x, cache, ctx: BlockCtx, cfg):
     if ctx.mode == "decode":
         attn_out, cache = MLA.mla_decode(p["mla"], h, cfg, cache, ctx.pos)
     else:
-        attn_out, cache = MLA.mla_train(p["mla"], h, cfg, ctx.mode, cache)
+        attn_out, cache = MLA.mla_train(
+            p["mla"], h, cfg, ctx.mode, cache, lengths=ctx.lengths
+        )
     x = x + attn_out
     h = L.rmsnorm(p["ln2"], x, cfg.norm_eps)
     ffn_out, aux = MOE.moe_ffn(p["moe"], h, cfg)
@@ -166,7 +168,7 @@ def _hymba_apply(p, x, cache, ctx: BlockCtx, cfg, window: int):
         p["attn"], h, cfg,
         mode=ctx.mode, cache=attn_cache, pos=ctx.pos,
         window=_window(cfg, ctx, window), protected=ctx.protected,
-        causal=ctx.causal,
+        causal=ctx.causal, lengths=ctx.lengths,
     )
     mamba_out, ssm_state = SSM.mamba(
         p["mamba"], h, cfg,
@@ -237,6 +239,7 @@ def xdec_apply(p, x, cache, ctx: BlockCtx, cfg):
         p["self_attn"], h, cfg,
         mode=ctx.mode, cache=self_cache, pos=ctx.pos,
         window=_window(cfg, ctx, cfg.sliding_window),
+        lengths=ctx.lengths,
     )
     x = x + attn_out
 

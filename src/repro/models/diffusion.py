@@ -22,12 +22,31 @@ from repro.models.model import Model
 
 Array = jax.Array
 
-#: block kinds whose only cross-position mixing is attention, which the
-#: denoiser can mask exactly for right-padded mixed-seq-len batches.  SSM /
-#: recurrent kinds (mamba, mlstm, slstm, hymba_*) mix positions through a
-#: directional state scan, and MLA has its own unmasked attention path —
-#: stacks containing those serve exact-shape instead of seq-bucketed.
-MASKABLE_BLOCKS = frozenset({"dense", "moe", "enc"})
+#: block kinds safe to run right-padded with per-row ``lengths``: a padded
+#: row's valid positions compute exactly the unpadded run's math.  Two ways
+#: a kind earns membership:
+#:
+#: * **maskable attention** — every cross-position mixing is an attention
+#:   softmax that takes the per-row kv_mask (dense / moe / enc / hymba_* /
+#:   mla_moe attention halves, xdec self-attention): pad keys get an exact
+#:   ``-1e30`` bias, valid keys an exact ``+0.0``.  All three SDPA impls
+#:   (naive / chunked / pallas+banded flash kernels) carry the mask
+#:   natively, so fused masked batches stay on the fast kernels.
+#: * **directional scans** — SSM / recurrent kinds (mamba inside hymba_*,
+#:   mlstm, slstm) mix positions strictly left-to-right, so right-padding
+#:   can never reach a prefix position's output (prefix-safety wall:
+#:   ``tests/test_prefix_safety.py``; see the contract note in
+#:   :mod:`repro.models.ssm`).
+#:
+#: The pad tail itself is handled by :meth:`DiffusionLM.eps`, which zeroes
+#: eps at pad positions so padded tails stay inert across a sampling run.
+MASKABLE_BLOCKS = frozenset(
+    {
+        "dense", "moe", "enc", "xdec",
+        "mlstm", "slstm", "hymba_swa", "hymba_full",
+        "mla_moe",
+    }
+)
 
 
 def diffusion_specs(model: Model) -> dict:
@@ -62,9 +81,11 @@ class DiffusionLM:
     def supports_length_masking(self) -> bool:
         """Can this denoiser run right-padded mixed-seq-len batches such
         that every valid position's output is exactly the unpadded run's?
-        True iff every block's cross-position mixing is maskable attention
-        (:data:`MASKABLE_BLOCKS`).  The serving engine consults this before
-        seq-bucketing and falls back to exact-shape grouping otherwise."""
+        True iff every block kind is in :data:`MASKABLE_BLOCKS` — maskable
+        attention or a right-pad prefix-safe directional scan.  The serving
+        engine consults this before seq-bucketing and falls back to
+        exact-shape grouping otherwise (counted by
+        ``sampler_masked_fallback_total``)."""
         return all(kind in MASKABLE_BLOCKS for kind, _ in self.config.blocks)
 
     def eps(

@@ -58,12 +58,18 @@ def _compress_kv(p, x, cfg, positions):
     return c_kv, k_rope[:, :, 0, :]          # (B,S,r), (B,S,rope)
 
 
-def mla_train(p, x: Array, cfg, mode: str = "train", cache=None):
-    """Full-sequence MLA (train / prefill). Returns (out, cache)."""
+def mla_train(p, x: Array, cfg, mode: str = "train", cache=None, lengths=None):
+    """Full-sequence MLA (train / prefill). Returns (out, cache).
+
+    ``lengths`` ((B,) int32) marks right-padding: pad keys are masked out
+    of every row's softmax (the attention path is causal, so valid rows
+    never see pad keys anyway — the mask makes the guarantee explicit and
+    keeps MLA on the same mixed-seq-len contract as GQA attention)."""
     a = cfg.mla
     b, s, _ = x.shape
     h = cfg.num_heads
     positions = jnp.arange(s, dtype=jnp.int32)
+    kv_mask = None if lengths is None else positions[None, :] < lengths[:, None]
 
     q_nope, q_rope = _project_q(p, x, cfg, positions)
     c_kv, k_rope = _compress_kv(p, x, cfg, positions)
@@ -83,7 +89,7 @@ def mla_train(p, x: Array, cfg, mode: str = "train", cache=None):
         positions, positions,
         window=0, causal=True, softcap=0.0,
         impl="naive" if s * s <= 1024 * 2048 else "chunked",
-        chunk=cfg.attn_chunk,
+        chunk=cfg.attn_chunk, kv_mask=kv_mask,
     )[..., : a.v_head_dim]
 
     if mode == "prefill":

@@ -7,6 +7,23 @@ live state tensor at (B, chunk, d_inner, N) instead of (B, S, d_inner, N).
 xLSTM's sLSTM is an inherently sequential recurrence (recurrent weights),
 implemented as a time scan; mLSTM (matrix memory) uses the same chunked
 pattern as Mamba.
+
+Right-pad prefix-safety (the mixed-seq-len masking contract): every scan
+in this module is strictly left-to-right — ``causal_conv1d`` left-pads,
+the chunked recurrences carry state forward only, and the intra-chunk
+mLSTM scores are tril-masked to exact zeros before any contraction — so a
+right-padded row's outputs at positions ``< length`` are identical to the
+exact-shape run's.  Two structural facts make the identity *bitwise*, not
+just mathematical: (1) ``jax.lax.associative_scan``'s combine tree for
+prefix element ``p`` depends only on ``p`` (Brent–Kung interleave), not on
+the scanned length, so a longer padded axis doesn't re-associate prefix
+sums; (2) chunk boundaries inside the prefix coincide between the exact
+and padded runs (``chunk = min(chunk, s)`` either yields the same chunking
+over the prefix, or both runs put the whole prefix in their first chunk),
+and masked/pad slots contribute exact ``+0.0`` terms to the fixed-shape
+contractions.  ``tests/test_prefix_safety.py`` walls this per block kind;
+it is what lets SSM kinds join ``MASKABLE_BLOCKS`` in
+:mod:`repro.models.diffusion`.
 """
 
 from __future__ import annotations

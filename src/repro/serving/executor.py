@@ -56,6 +56,7 @@ import math
 import threading
 import time
 import warnings
+import weakref
 from concurrent.futures import Future, InvalidStateError
 from typing import Any
 
@@ -66,6 +67,7 @@ from jax.sharding import Mesh
 
 from repro.core import NoiseSchedule, SolverConfig, get_program
 from repro.core.program import SolverProgram
+from repro.models import attention as _attention
 from repro.models.diffusion import DiffusionLM
 from repro.parallel.sharding import (
     ParamReplicator,
@@ -349,6 +351,32 @@ class FusedExecutor:
         self._m_wall = self.metrics.histogram(
             "sampler_batch_wall_seconds", "device wall time per fused batch"
         )
+        # the permanent canary that masked (mixed-seq-len) traffic regressed
+        # off the fast path.  Two sources feed it: sdpa rewriting a requested
+        # fast impl to chunked (impl = the requested attention kernel; fires
+        # at trace time, one count per compiled program that materialized on
+        # the slow path), and the engine's seq-bucketing verdict falling back
+        # to exact-shape grouping (impl = "seq-bucketing"; once per solver).
+        # A healthy dense/pallas deployment holds this at zero.
+        self._m_masked_fallback = self.metrics.counter(
+            "sampler_masked_fallback_total",
+            "masked-traffic fast-path fallbacks by requested impl and "
+            "reason: sdpa fast-kernel rewrites to chunked, and engine "
+            "seq-bucketing verdicts that force exact-shape grouping",
+        )
+        # weakref so a dropped executor never keeps itself alive through the
+        # module-level observer list; a dead ref unregisters itself on fire
+        self_ref = weakref.ref(self)
+
+        def _on_sdpa_fallback(impl: str, reason: str) -> None:
+            ex = self_ref()
+            if ex is None:
+                _attention.unregister_fallback_observer(_on_sdpa_fallback)
+                return
+            ex._m_masked_fallback.inc(impl=impl, reason=reason)
+
+        _attention.register_fallback_observer(_on_sdpa_fallback)
+        self._sdpa_fallback_observer = _on_sdpa_fallback
 
     # ---- solver routing --------------------------------------------------
     def resolve_solver(self, req: SampleRequest) -> str:
@@ -402,11 +430,21 @@ class FusedExecutor:
         if verdict is None:
             program = self.program_for(name)
             cfg = self.config_for(name)
+            fusable = program.fusable(cfg)
+            lengths_ok = program.supports_lengths(cfg)
+            maskable = bool(getattr(self.dlm, "supports_length_masking", False))
             verdict = self._seq_masked[name] = (
-                program.fusable(cfg)
-                and program.supports_lengths(cfg)
-                and bool(getattr(self.dlm, "supports_length_masking", False))
+                fusable and lengths_ok and maskable
             )
+            if not verdict:
+                # exact-shape grouping is the engine-level slow path; count
+                # it on the same canary the sdpa kernel fallbacks feed
+                reason = (
+                    "non-fusable-config" if not fusable
+                    else "program-no-lengths" if not lengths_ok
+                    else "denoiser-unmaskable"
+                )
+                self._m_masked_fallback.inc(impl="seq-bucketing", reason=reason)
         return verdict
 
     def bucket_seq(self, n: int) -> int:

@@ -143,3 +143,131 @@ def test_int8_kv_decode_matches_full():
         # ~2% per-tensor int8 noise compounds across layers and steps;
         # a scale/layout bug would blow past 1.0
         assert err < 0.2, (i, err)
+
+
+# ---------------------------------------------------------------------------
+# per-row kv_mask: every impl carries it natively (mixed-seq-len serving)
+# ---------------------------------------------------------------------------
+
+
+def _lengths_mask(s, lengths):
+    return jnp.arange(s)[None, :] < jnp.asarray(lengths, jnp.int32)[:, None]
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    st.sampled_from([(4, 2), (6, 1)]),  # (H, KV)
+    st.integers(8, 40),                 # S
+    st.sampled_from([0, 7]),            # window
+    st.booleans(),                      # causal
+    st.integers(0, 10_000),             # lengths seed
+)
+def test_masked_chunked_matches_masked_naive(heads, s, window, causal, lseed):
+    h, kv = heads
+    b = 3
+    q = _rand(0, b, s, h, 16)
+    k = _rand(1, b, s, kv, 16)
+    v = _rand(2, b, s, kv, 16)
+    pos = jnp.arange(s)
+    lens = jax.random.randint(
+        jax.random.PRNGKey(lseed), (b,), 0, s + 1
+    ).tolist()
+    lens[0] = s  # pin a full row
+    mask = _lengths_mask(s, lens)
+    ref = _naive_sdpa(
+        q, k, v, pos, pos, window=window, causal=causal, softcap=0.0,
+        kv_mask=mask,
+    )
+    got = _chunked_sdpa(
+        q, k, v, pos, pos, window=window, causal=causal, softcap=0.0,
+        chunk=16, kv_mask=mask,
+    )
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref), atol=2e-5)
+
+
+def test_masked_pallas_and_banded_match_chunked():
+    """sdpa-level wall: with kv_mask set, the pallas and banded fast paths
+    agree with chunked on a windowed+sinks causal layout that exercises all
+    three dispatches."""
+    b, s, h, kv, hd = 3, 128, 4, 2, 32
+    q = _rand(0, b, s, h, hd)
+    k = _rand(1, b, s, kv, hd)
+    v = _rand(2, b, s, kv, hd)
+    pos = jnp.arange(s)
+    mask = _lengths_mask(s, (128, 57, 0))
+    kw = dict(window=32, causal=True, softcap=0.0, protected=2, kv_mask=mask)
+    ref = sdpa(q, k, v, pos, pos, impl="chunked", chunk=64, **kw)
+    banded = sdpa(q, k, v, pos, pos, impl="banded", **kw)  # s >= 4*window
+    pallas = sdpa(q, k, v, pos, pos, impl="pallas", **kw)
+    np.testing.assert_allclose(np.asarray(banded), np.asarray(ref), atol=2e-5)
+    np.testing.assert_allclose(np.asarray(pallas), np.asarray(ref), atol=2e-5)
+    assert not np.asarray(pallas[2]).any()  # all-pad row -> exact zeros
+
+
+def test_fully_masked_rows_zero_on_all_impls():
+    b, s, h, hd = 2, 16, 2, 16
+    q, k, v = _rand(0, b, s, h, hd), _rand(1, b, s, h, hd), _rand(2, b, s, h, hd)
+    pos = jnp.arange(s)
+    mask = _lengths_mask(s, (0, 5))
+    for impl in ("naive", "chunked", "pallas"):
+        out = sdpa(q, k, v, pos, pos, causal=False, impl=impl, kv_mask=mask)
+        assert not np.asarray(out[0]).any(), impl
+        assert np.asarray(out[1]).any(), impl
+
+
+# ---------------------------------------------------------------------------
+# fallback machinery: loud, observable, and never fired by masked fast paths
+# ---------------------------------------------------------------------------
+
+
+def test_banded_layout_unmet_falls_back_loudly():
+    import warnings as _warnings
+
+    from repro.models import attention as A
+
+    b, s, h, hd = 1, 16, 2, 8
+    q, k, v = _rand(0, b, s, h, hd), _rand(1, b, s, h, hd), _rand(2, b, s, h, hd)
+    pos = jnp.arange(s)
+    events = []
+    obs = A.register_fallback_observer(lambda i, r: events.append((i, r)))
+    # the once-per-process warning may have fired in an earlier test: reset
+    A._warned_fallbacks.discard(("banded", "banded-layout-unmet"))
+    try:
+        with _warnings.catch_warnings(record=True) as caught:
+            _warnings.simplefilter("always")
+            out = sdpa(q, k, v, pos, pos, causal=False, impl="banded")
+        assert events == [("banded", "banded-layout-unmet")]
+        msgs = [str(w.message) for w in caught if w.category is RuntimeWarning]
+        assert any("falling back to chunked" in m for m in msgs)
+        ref = sdpa(q, k, v, pos, pos, causal=False, impl="chunked")
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+        # second hit: observer fires again, warning does not
+        with _warnings.catch_warnings(record=True) as caught2:
+            _warnings.simplefilter("always")
+            sdpa(q, k, v, pos, pos, causal=False, impl="banded")
+        assert len(events) == 2
+        assert not [w for w in caught2 if w.category is RuntimeWarning]
+    finally:
+        A.unregister_fallback_observer(obs)
+
+
+def test_masked_fast_paths_do_not_fire_fallback():
+    """The whole point of the tentpole: kv_mask on pallas/banded/chunked is
+    native, so no fallback observer fires for masked traffic."""
+    from repro.models import attention as A
+
+    b, s, h, hd = 2, 128, 2, 16
+    q, k, v = _rand(0, b, s, h, hd), _rand(1, b, s, h, hd), _rand(2, b, s, h, hd)
+    pos = jnp.arange(s)
+    mask = _lengths_mask(s, (128, 40))
+    events = []
+    obs = A.register_fallback_observer(lambda i, r: events.append((i, r)))
+    try:
+        sdpa(q, k, v, pos, pos, causal=False, impl="pallas", kv_mask=mask)
+        sdpa(q, k, v, pos, pos, causal=True, window=32, impl="banded",
+             kv_mask=mask)
+        sdpa(q, k, v, pos, pos, causal=False, impl="chunked", kv_mask=mask)
+        sdpa(q, k, v, pos, pos, causal=False, impl="auto", kv_mask=mask)
+    finally:
+        A.unregister_fallback_observer(obs)
+    assert events == []

@@ -170,3 +170,136 @@ def test_era_combine_drop_in():
     eb2, ec2 = ops.era_combine(eps_sel, t_sel, e_hist, t_next)
     np.testing.assert_allclose(np.asarray(eb1), np.asarray(eb2), atol=2e-5)
     np.testing.assert_allclose(np.asarray(ec1), np.asarray(ec2), atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# masked flash attention (per-row kv_mask operand — mixed-seq-len serving)
+# ---------------------------------------------------------------------------
+
+
+def _ragged_mask(s, lengths):
+    return jnp.arange(s)[None, :] < jnp.asarray(lengths, jnp.int32)[:, None]
+
+
+MASKED_FLASH_CASES = [
+    # (H, KV, S, hd, window, causal, softcap, protected, lengths)
+    # lengths sweep ragged rows including all-pad (0) and full-length rows
+    (4, 2, 128, 64, 0, True, 0.0, 0, (128, 57, 0)),
+    (4, 2, 128, 64, 0, False, 0.0, 0, (128, 57, 0)),     # denoiser layout
+    (8, 8, 256, 128, 0, False, 0.0, 0, (200, 1)),
+    (4, 1, 100, 48, 0, True, 0.0, 0, (99, 31)),          # MQA + ragged shape
+    (6, 3, 130, 80, 32, True, 0.0, 4, (120, 77)),        # window + sinks
+    (2, 2, 96, 64, 0, True, 30.0, 0, (96, 5)),           # softcap
+]
+
+
+@pytest.mark.parametrize("case", MASKED_FLASH_CASES)
+def test_masked_flash_attention_vs_masked_refs(case):
+    """Masked Pallas kernel vs BOTH masked oracles: the pure-jnp ref and
+    the masked chunked-SDPA streaming softmax.  All-pad rows come back
+    exactly zero on every impl."""
+    from repro.models.attention import _chunked_sdpa
+
+    h, kv, s, hd, window, causal, cap, prot, lengths = case
+    b = len(lengths)
+    q = _rand(0, (b, s, h, hd))
+    k = _rand(1, (b, s, kv, hd))
+    v = _rand(2, (b, s, kv, hd))
+    pos = jnp.arange(s)
+    mask = _ragged_mask(s, lengths)
+    out = ops.flash_attention(
+        q, k, v, pos, pos, kv_mask=mask,
+        window=window, causal=causal, softcap=cap, protected=prot,
+    )
+    r = ref.flash_attention_ref(
+        q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+        v.transpose(0, 2, 1, 3), pos, pos,
+        window=window, causal=causal, softcap=cap, protected=prot,
+        kv_mask=mask,
+    ).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(r), atol=2e-5)
+    c = _chunked_sdpa(
+        q, k, v, pos, pos, window=window, causal=causal, softcap=cap,
+        chunk=64, protected=prot, kv_mask=mask,
+    )
+    np.testing.assert_allclose(np.asarray(out), np.asarray(c), atol=2e-5)
+    for row, n in enumerate(lengths):
+        if n == 0:
+            assert not np.asarray(out[row]).any(), "all-pad row must be zero"
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    st.sampled_from([(2, 1), (4, 2), (4, 4), (6, 3)]),   # GQA group sizes
+    st.integers(17, 150),                                # seq len
+    st.sampled_from([32, 64, 96]),                       # head dim
+    st.sampled_from([(0, 0, True), (0, 0, False), (24, 0, True),
+                     (24, 4, True)]),                    # window/sinks/causal
+    st.sampled_from([0.0, 20.0]),                        # softcap
+    st.integers(0, 10_000),                              # lengths seed
+)
+def test_masked_flash_attention_hypothesis(heads, s, hd, wpc, cap, lseed):
+    """Hypothesis sweep of the masked kernel across GQA group sizes,
+    window/causal, softcap, protected sinks, and ragged per-row lengths —
+    always including an all-pad row and a full-length row."""
+    h, kv = heads
+    window, prot, causal = wpc
+    b = 4
+    q = _rand(6, (b, s, h, hd))
+    k = _rand(7, (b, s, kv, hd))
+    v = _rand(8, (b, s, kv, hd))
+    pos = jnp.arange(s)
+    lkey = jax.random.PRNGKey(lseed)
+    lens = jax.random.randint(lkey, (b,), 0, s + 1).tolist()
+    lens[0], lens[1] = s, 0      # pin the edge rows
+    mask = _ragged_mask(s, lens)
+    out = ops.flash_attention(
+        q, k, v, pos, pos, kv_mask=mask,
+        window=window, causal=causal, softcap=cap, protected=prot,
+    )
+    r = ref.flash_attention_ref(
+        q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+        v.transpose(0, 2, 1, 3), pos, pos,
+        window=window, causal=causal, softcap=cap, protected=prot,
+        kv_mask=mask,
+    ).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(r), atol=3e-5)
+    assert not np.asarray(out[1]).any()
+
+
+def test_masked_flash_padding_invariance_bitwise():
+    """The serving property the mask exists for: a row right-padded from L
+    to S with kv_mask runs BIT-IDENTICAL (on its valid slice) to the same
+    row's exact-shape unmasked kernel run — extra fully-masked kv blocks
+    rescale the online-softmax state by exp(0) == 1.0 exactly."""
+    b, h, kv, hd, s = 1, 4, 2, 64, 96
+    for L in (1, 31, 64, 95):
+        q = _rand(10, (b, s, h, hd))
+        k = _rand(11, (b, s, kv, hd))
+        v = _rand(12, (b, s, kv, hd))
+        for causal in (False, True):
+            exact = ops.flash_attention(
+                q[:, :L], k[:, :L], v[:, :L],
+                jnp.arange(L), jnp.arange(L), causal=causal,
+            )
+            padded = ops.flash_attention(
+                q, k, v, jnp.arange(s), jnp.arange(s),
+                kv_mask=_ragged_mask(s, [L]), causal=causal,
+            )
+            np.testing.assert_array_equal(
+                np.asarray(padded[:, :L]), np.asarray(exact),
+                err_msg=f"L={L} causal={causal}",
+            )
+
+
+def test_unmasked_flash_unchanged_by_mask_plumbing():
+    """kv_mask=None and an all-valid kv_mask agree with each other and the
+    unmasked oracle (the mask operand costs nothing when absent)."""
+    b, h, kv, s, hd = 2, 4, 2, 128, 64
+    q, k, v = _rand(0, (b, s, h, hd)), _rand(1, (b, s, kv, hd)), _rand(2, (b, s, kv, hd))
+    pos = jnp.arange(s)
+    out_none = ops.flash_attention(q, k, v, pos, pos)
+    out_full = ops.flash_attention(
+        q, k, v, pos, pos, kv_mask=jnp.ones((b, s), bool)
+    )
+    np.testing.assert_array_equal(np.asarray(out_none), np.asarray(out_full))

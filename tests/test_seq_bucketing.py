@@ -296,9 +296,85 @@ def test_denoiser_length_mask_parity_real_attention():
     )
     assert (e_mask[:, l_exact:] == 0.0).all()
 
-    # ssm-family stacks must report unmaskable (directional state scans)
-    cfg2 = get_config("xlstm-350m", smoke=True)
-    assert not DiffusionLM(build_model(cfg2)).supports_length_masking
+    # SSM / MLA stacks are maskable too: directional scans are right-pad
+    # prefix-safe and MLA threads the kv mask (tests/test_prefix_safety.py)
+    for name in ("xlstm-350m", "hymba-1.5b", "deepseek-v2-lite-16b"):
+        cfg2 = get_config(name, smoke=True)
+        assert DiffusionLM(build_model(cfg2)).supports_length_masking, name
+
+
+def _real_dlm_engine(arch: str):
+    import jax
+
+    from repro.configs import get_config
+    from repro.core import linear_schedule
+    from repro.models import build_model
+    from repro.models.diffusion import DiffusionLM
+
+    cfg = get_config(arch, smoke=True)
+    dlm = DiffusionLM(build_model(cfg))
+    params = dlm.init(jax.random.PRNGKey(0))
+    schedule = linear_schedule()
+    engine = BatchedSampler(
+        dlm, schedule, batch_buckets=(2, 4), seq_buckets=SEQ_BUCKETS
+    )
+    exact = BatchedSampler(dlm, schedule, batch_buckets=None)
+    return engine, exact, params
+
+
+@pytest.mark.parametrize("arch", ["xlstm-350m", "deepseek-v2-lite-16b"])
+def test_real_denoiser_padding_invariance_wall(arch):
+    """The full padding-invariance wall (x0 + per-sample ERS selections) on
+    real SSM (xlstm) and MLA (deepseek-v2-lite) DiffusionLM stacks — the
+    block kinds PR 5 excluded from fusion.  A mixed-length fused drain must
+    match each request's exact-shape solo run at the real-denoiser parity
+    bar (atol=1e-6; observed bit-identical on CPU smoke shapes), with
+    bitwise-identical ERS basis selections."""
+    engine, exact, params = _real_dlm_engine(arch)
+    assert engine.executor.seq_masked("era") is True
+    reqs = [
+        SampleRequest(batch=1, seq_len=L, nfe=5, seed=700 + i)
+        for i, L in enumerate([3, 8, 5])
+    ]
+    tickets = [engine.submit(r) for r in reqs]
+    fused = engine.drain(params)
+    for ticket, req in zip(tickets, reqs):
+        got = fused[ticket]
+        assert got.padded_seq_len == (4 if req.seq_len <= 4 else 8)
+        t_ref = exact.submit(req)
+        ref = exact.drain(params)[t_ref]
+        np.testing.assert_allclose(
+            np.asarray(got.x0), np.asarray(ref.x0), atol=1e-6,
+            err_msg=f"{arch}: fused padded x0 diverged from exact-shape "
+            f"solo run (seq_len={req.seq_len})",
+        )
+        np.testing.assert_array_equal(
+            np.asarray(got.aux["ers_selection_history"]),
+            np.asarray(ref.aux["ers_selection_history"]),
+            err_msg=f"{arch}: ERS basis selection flipped under padding "
+            f"(seq_len={req.seq_len})",
+        )
+    # the canary: a fully-maskable stack drains masked fused traffic with
+    # zero fast-path fallbacks
+    counter = engine.executor.metrics.get("sampler_masked_fallback_total")
+    assert counter is not None
+    assert not counter._values, dict(counter._values)
+
+
+def test_masked_fallback_counter_counts_engine_fallbacks():
+    """An unmaskable denoiser's exact-shape verdict increments the
+    ``sampler_masked_fallback_total`` canary with the engine label."""
+    dlm = OracleDenoiser(ANALYTIC)
+    dlm.supports_length_masking = False
+    engine = BatchedSampler(
+        dlm, ANALYTIC.schedule, batch_buckets=(2, 4), seq_buckets=SEQ_BUCKETS
+    )
+    assert engine.executor.seq_masked("era") is False
+    counter = engine.executor.metrics.get("sampler_masked_fallback_total")
+    assert counter.value(impl="seq-bucketing", reason="denoiser-unmaskable") == 1
+    # the verdict is cached per solver: re-asking does not re-count
+    assert engine.executor.seq_masked("era") is False
+    assert counter.value(impl="seq-bucketing", reason="denoiser-unmaskable") == 1
 
 
 def test_mesh_mixed_length_drain_parity(mesh8):
