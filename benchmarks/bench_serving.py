@@ -56,6 +56,23 @@ compiled-program counts; the sweep is written as `BENCH_seqmix.json` (the
 CI bench-smoke job uploads it).  See `docs/serving.md` for the masking
 contract that makes fused results bit-identical to exact-shape runs.
 
+NFE-mix sweep (`--nfe-mix`): an open-loop Poisson client draws each
+request's NFE budget from a mixed distribution (all at one seq_len) and
+streams it at two continuous-batching servers:
+
+  * exact — grouping by exact `(solver, seq_len, nfe)`: every distinct
+    budget fragments into its own queue and compiles its own programs;
+  * fused — NFE bucketing (`nfe_buckets=` ladder): mixed budgets scan to
+    the bucketed max NFE with per-row step masks, so queues fill across
+    budgets and the compile count is bounded by the ladder.
+
+Both modes report p50/p99 latency, throughput, compiled-program counts,
+and the wasted padding step-rows counter; the sweep is written as
+`BENCH_nfemix.json` (the CI bench-smoke job uploads it).  Unlike the
+seq-mix warnings, the ladder bound is enforced: the sweep exits non-zero
+if fused traffic compiles more programs than |nfe_buckets| x
+|batch_buckets| or compiles any off-ladder NFE.
+
 Front-door sweep (`--frontdoor`): boots the real HTTP server as a
 subprocess (`python -m repro.launch.serve --listen --port 0`, waiting on
 its `FRONTDOOR READY <url>` line), then drives an open-loop Poisson client
@@ -494,6 +511,144 @@ def run_seq_mix(out_path: str = "BENCH_seqmix.json") -> None:
         )
 
 
+def run_nfe_mix(out_path: str = "BENCH_nfemix.json") -> None:
+    """Mixed-NFE open-loop sweep: NFE bucketing + per-row step masks vs
+    exact-NFE grouping, same traffic, same policy, same seq_len.
+
+    Exits non-zero if the fused mode compiles more programs than the
+    ladder bounds (|nfe_buckets| x |batch_buckets|) or compiles any
+    off-ladder NFE — the structural claim NFE bucketing makes to CI.
+    """
+    dlm, params, data, cfg = C.trained_model(30 if C.SMOKE else 150)
+    seq = 4 if C.SMOKE else 16
+    n_req = 24 if C.SMOKE else 96
+    batch_buckets = (1, 2, 4, 8)
+    if C.SMOKE:
+        nfes = (4, 5, 6)  # ERA floor: nfe >= k (engine default k=4)
+        nfe_buckets = (4, 6)
+    else:
+        nfes = (10, 14, 18, 22, 25)
+        nfe_buckets = (18, 32)
+    rng = np.random.default_rng(0)
+    budgets = [int(x) for x in rng.choice(nfes, n_req)]
+
+    # service-time anchor: a single largest-budget request, exact shape
+    anchor = BatchedSampler(dlm, C.SCHEDULE, batch_buckets=batch_buckets)
+    t_single = float("inf")
+    for r in range(3):
+        anchor.submit_with_future(_request(seq, max(nfes), 9600 + r))
+        t0 = time.perf_counter()
+        anchor.drain(params)
+        t_single = min(t_single, time.perf_counter() - t0)
+
+    load = 4.0
+    gaps = _poisson_gaps(rng, n_req, load / t_single)
+    policy = SchedulerPolicy(
+        max_wait_ms=max(1.0, 2 * t_single * 1e3), target_occupancy=1.0
+    )
+    record = {
+        "bench": "serving/nfe-mix",
+        "smoke": C.SMOKE,
+        "seq_len": seq,
+        "requests": n_req,
+        "load": load,
+        "t_single_s": t_single,
+        "nfe_distribution": list(nfes),
+        "nfe_buckets": list(nfe_buckets),
+        "batch_buckets": list(batch_buckets),
+        "policy": {
+            "max_wait_ms": policy.max_wait_ms,
+            "target_occupancy": policy.target_occupancy,
+        },
+        "modes": {},
+    }
+
+    def stream(engine):
+        futures = []
+        with AsyncBatchedSampler(engine, params, policy) as sched:
+            t_start = open_loop(
+                gaps,
+                lambda i: futures.append(
+                    sched.submit(_request(seq, budgets[i], 3500 + i))
+                ),
+            )
+            results = [f.result() for f in futures]
+            makespan = time.perf_counter() - t_start
+            stats = sched.stats()
+        return [r.latency_s for r in results], makespan, stats
+
+    for mode, ladder in (("exact", None), ("fused", nfe_buckets)):
+        engine = BatchedSampler(
+            dlm, C.SCHEDULE, batch_buckets=batch_buckets, nfe_buckets=ladder
+        )
+        stream(engine)  # untimed warm stream: compiles the hot buckets
+        best = None
+        for _ in range(POISSON_REPEATS):
+            lats, span, stats = stream(engine)
+            cand = {
+                "throughput_rps": n_req / span,
+                K.MEAN_BATCH_ROWS: stats[K.MEAN_BATCH_ROWS],
+                K.BATCHES: stats[K.BATCHES],
+                **_percentiles(lats),
+            }
+            if best is None or cand["throughput_rps"] > best["throughput_rps"]:
+                best = cand
+        best["compiled_programs"] = len(engine.compile_cache())
+        # the fuse key carries the scanned-to NFE in its config slot
+        best["compiled_nfes"] = sorted(
+            {k[1].nfe for k in engine.compile_cache()}
+        )
+        pad_rows = engine.executor.metrics.get("sampler_nfe_padding_rows_total")
+        best["nfe_padding_rows"] = (
+            pad_rows.value(solver=engine.executor.solver_name)
+            if pad_rows
+            else 0.0
+        )
+        record["modes"][mode] = best
+        C.emit(
+            f"serving/nfemix/{mode}",
+            best["p50_ms"] * 1e3,
+            f"p99_ms={best['p99_ms']:.2f},thpt={best['throughput_rps']:.1f}/s,"
+            f"compiles={best['compiled_programs']},"
+            f"rows/batch={best[K.MEAN_BATCH_ROWS]:.1f}",
+        )
+
+    fused, exact = record["modes"]["fused"], record["modes"]["exact"]
+    record["speedup"] = fused["throughput_rps"] / exact["throughput_rps"]
+    C.emit(
+        "serving/nfemix/speedup",
+        record["speedup"] * 1e6,
+        f"fused_thpt/exact_thpt={record['speedup']:.2f}x,"
+        f"compiles_fused={fused['compiled_programs']},"
+        f"compiles_exact={exact['compiled_programs']}",
+    )
+    with open(out_path, "w") as f:
+        json.dump(record, f, indent=2)
+    print(f"# wrote {out_path}")
+    # the structural claims of NFE bucketing, enforced (not just warned):
+    # mixed-NFE traffic must never compile past the ladder
+    failures = []
+    max_fused = len(nfe_buckets) * len(batch_buckets)
+    if fused["compiled_programs"] > max_fused:
+        failures.append(
+            f"fused mode compiled {fused['compiled_programs']} programs "
+            f"(> nfe ladder x batch buckets = {max_fused})"
+        )
+    if not set(fused["compiled_nfes"]) <= set(nfe_buckets):
+        failures.append(
+            f"fused mode compiled off-ladder NFEs {fused['compiled_nfes']}"
+        )
+    if record["speedup"] <= 1.0:
+        print(
+            f"# WARNING: fused mixed-NFE throughput did not beat the "
+            f"exact-NFE baseline (speedup {record['speedup']:.2f}x)"
+        )
+    for msg in failures:
+        print(f"# FAIL: {msg}")
+    if failures:
+        raise SystemExit(1)
+
+
 FRONTDOOR_LOADS = (2.0, 4.0)
 # instruments the /metrics scrape must expose (acceptance contract —
 # see docs/serving.md)
@@ -511,6 +666,7 @@ FRONTDOOR_REQUIRED_METRICS = (
     "sampler_warmup_programs_total",
     "sampler_admission_rejects_total",
     "sampler_masked_fallback_total",
+    "sampler_nfe_padding_rows_total",
     "sampler_request_latency_seconds",
     "frontdoor_http_requests_total",
 )
@@ -703,6 +859,13 @@ if __name__ == "__main__":
         "vs exact-shape grouping; writes BENCH_seqmix.json",
     )
     ap.add_argument(
+        "--nfe-mix",
+        action="store_true",
+        help="open-loop mixed-NFE sweep: NFE bucketing + per-row step masks "
+        "vs exact-NFE grouping; writes BENCH_nfemix.json and fails if "
+        "fused traffic compiles more programs than the ladder bounds",
+    )
+    ap.add_argument(
         "--frontdoor",
         action="store_true",
         help="open-loop Poisson sweep over the wire against a subprocess "
@@ -713,7 +876,8 @@ if __name__ == "__main__":
         default=None,
         help="JSON artifact path (default BENCH_serving.json for --poisson, "
         "BENCH_solvers.json for --solver-sweep, BENCH_seqmix.json for "
-        "--seq-mix, BENCH_frontdoor.json for --frontdoor)",
+        "--seq-mix, BENCH_nfemix.json for --nfe-mix, BENCH_frontdoor.json "
+        "for --frontdoor)",
     )
     args = ap.parse_args()
     if args.mesh:
@@ -726,6 +890,8 @@ if __name__ == "__main__":
         run_solver_sweep(args.out or "BENCH_solvers.json")
     elif args.seq_mix:
         run_seq_mix(args.out or "BENCH_seqmix.json")
+    elif args.nfe_mix:
+        run_nfe_mix(args.out or "BENCH_nfemix.json")
     elif args.frontdoor:
         run_frontdoor(args.out or "BENCH_frontdoor.json")
     else:

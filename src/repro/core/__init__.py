@@ -8,6 +8,7 @@ Public API:
     timesteps                        -> solver time grids
 """
 
+from repro.core.dpm_adaptive import AdaptiveDPMConfig
 from repro.core.era import ERAConfig, era_combine
 from repro.core.program import SolverProgram
 from repro.core.registry import (
@@ -26,6 +27,7 @@ from repro.core.schedules import (
 from repro.core.solver_base import SolverConfig, SolverOutput, ddim_step
 
 __all__ = [
+    "AdaptiveDPMConfig",
     "ERAConfig",
     "NoiseSchedule",
     "SolverConfig",

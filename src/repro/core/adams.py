@@ -27,8 +27,11 @@ import jax.numpy as jnp
 
 from repro.core.program import (
     SolverProgram,
+    StepMask,
     constrain_buffers,
     constrain_x,
+    step_active,
+    step_row_times,
     trajectory_aux,
 )
 from repro.core.schedules import NoiseSchedule, timesteps
@@ -91,39 +94,64 @@ def explicit_adams_scan(
     config: SolverConfig,
     order: int = 4,
     shardings=None,
+    steps: StepMask | None = None,
 ) -> SolverOutput:
     """AB-`order` linear multistep in eps-space (PNDM-style), 1 NFE/step."""
     n = config.nfe
-    ts = timesteps(schedule, n, config.scheme, t_end=config.t_end)
     dt = config.solver_dtype
     if eps_buf.shape != (n + 1,) + x_init.shape:
         raise ValueError(
             f"eps buffer shape {eps_buf.shape} != {(n + 1,) + x_init.shape}"
         )
+    if steps is None:
+        ts = timesteps(schedule, n, config.scheme, t_end=config.t_end)
+        t0 = ts[0]
+    else:
+        t0 = steps.ts[:, 0].reshape((-1,) + (1,) * (x_init.ndim - 1))
 
     x = constrain_x(x_init.astype(dt), shardings)
     eps_buf, t_buf = constrain_buffers(eps_buf, t_buf, shardings)
-    e0 = eps_fn(x, ts[0]).astype(dt)
-    eps_buf, t_buf = buffer_append(eps_buf, t_buf, jnp.int32(0), e0, ts[0])
+    e0 = eps_fn(x, t0).astype(dt)
+    eps_buf, t_buf = buffer_append(
+        eps_buf, t_buf, jnp.int32(0), e0,
+        jnp.float32(0.0) if steps is not None else ts[0],
+    )
 
     def step(carry, inp):
         x, eps_buf, t_buf = carry
-        i, t_cur, t_next = inp
+        if steps is None:
+            i, t_cur, t_next = inp
+        else:
+            i = inp
+            t_cur, t_next = step_row_times(steps, i, x.ndim)
         eps_c = _ab_predict(eps_buf, i, order)
         x_next = ddim_step(schedule, x, eps_c, t_cur, t_next)
+        if steps is not None:
+            x_next = jnp.where(step_active(steps, i, x.ndim), x_next, x)
 
         def observe(_):
-            return eps_fn(x_next, t_next).astype(dt)
+            e = eps_fn(x_next, t_next).astype(dt)
+            if steps is not None:
+                # a row's own final step appends zeros, like the exact run
+                obs = (i + 1) < steps.active_steps
+                e = jnp.where(obs.reshape((-1,) + (1,) * (e.ndim - 1)), e, 0.0)
+            return e
 
         e_new = jax.lax.cond(
             i + 1 < n, observe, lambda _: jnp.zeros_like(x_next), None
         )
-        eps_buf2, t_buf2 = buffer_append(eps_buf, t_buf, i + 1, e_new, t_next)
+        eps_buf2, t_buf2 = buffer_append(
+            eps_buf, t_buf, i + 1, e_new,
+            jnp.float32(0.0) if steps is not None else t_next,
+        )
         traj_x = x_next if config.return_trajectory else None
         return (x_next, eps_buf2, t_buf2), traj_x
 
+    grid = (
+        step_grid(ts) if steps is None else jnp.arange(n, dtype=jnp.int32)
+    )
     (x, eps_buf, t_buf), traj_tail = jax.lax.scan(
-        step, (x, eps_buf, t_buf), step_grid(ts)
+        step, (x, eps_buf, t_buf), grid
     )
     aux = trajectory_aux(x_init, traj_tail, config.return_trajectory, dtype=dt)
     return SolverOutput(x0=x.astype(x_init.dtype), nfe=jnp.int32(n), aux=aux)
@@ -155,29 +183,43 @@ def implicit_adams_pece_scan(
     schedule: NoiseSchedule,
     config: SolverConfig,
     shardings=None,
+    steps: StepMask | None = None,
 ) -> SolverOutput:
     """Traditional PECE implicit Adams (2 NFE/step).
 
     With an NFE budget B the solver takes B//2 steps.  The history buffer
-    stores evaluations at *corrected* points.
+    stores evaluations at *corrected* points.  ``steps.active_steps``
+    counts PECE steps (not NFE) — the program's ``steps_for_nfe`` does the
+    halving.
     """
     n_steps = pece_num_steps(config.nfe)
-    ts = timesteps(schedule, n_steps, config.scheme, t_end=config.t_end)
     dt = config.solver_dtype
     if eps_buf.shape != (n_steps + 1,) + x_init.shape:
         raise ValueError(
             f"eps buffer shape {eps_buf.shape} != "
             f"{(n_steps + 1,) + x_init.shape}"
         )
+    if steps is None:
+        ts = timesteps(schedule, n_steps, config.scheme, t_end=config.t_end)
+        t0 = ts[0]
+    else:
+        t0 = steps.ts[:, 0].reshape((-1,) + (1,) * (x_init.ndim - 1))
 
     x = constrain_x(x_init.astype(dt), shardings)
     eps_buf, t_buf = constrain_buffers(eps_buf, t_buf, shardings)
-    e0 = eps_fn(x, ts[0]).astype(dt)
-    eps_buf, t_buf = buffer_append(eps_buf, t_buf, jnp.int32(0), e0, ts[0])
+    e0 = eps_fn(x, t0).astype(dt)
+    eps_buf, t_buf = buffer_append(
+        eps_buf, t_buf, jnp.int32(0), e0,
+        jnp.float32(0.0) if steps is not None else ts[0],
+    )
 
     def step(carry, inp):
         x, eps_buf, t_buf = carry
-        i, t_cur, t_next = inp
+        if steps is None:
+            i, t_cur, t_next = inp
+        else:
+            i = inp
+            t_cur, t_next = step_row_times(steps, i, x.ndim)
         # P: AB predictor at the best order available
         eps_p = _ab_predict(eps_buf, i, 4)
         x_pred = ddim_step(schedule, x, eps_p, t_cur, t_next)
@@ -197,20 +239,34 @@ def implicit_adams_pece_scan(
         # trapezoid fallback while history is short
         eps_c = jnp.where(i >= 2, eps_c, 0.5 * (e_bar + e_i))
         x_next = ddim_step(schedule, x, eps_c, t_cur, t_next)
+        if steps is not None:
+            x_next = jnp.where(step_active(steps, i, x.ndim), x_next, x)
 
         # E: evaluate at the corrected point for the history buffer
         def observe(_):
-            return eps_fn(x_next, t_next).astype(dt)
+            e = eps_fn(x_next, t_next).astype(dt)
+            if steps is not None:
+                obs = (i + 1) < steps.active_steps
+                e = jnp.where(obs.reshape((-1,) + (1,) * (e.ndim - 1)), e, 0.0)
+            return e
 
         e_new = jax.lax.cond(
             i + 1 < n_steps, observe, lambda _: jnp.zeros_like(x_next), None
         )
-        eps_buf2, t_buf2 = buffer_append(eps_buf, t_buf, i + 1, e_new, t_next)
+        eps_buf2, t_buf2 = buffer_append(
+            eps_buf, t_buf, i + 1, e_new,
+            jnp.float32(0.0) if steps is not None else t_next,
+        )
         traj_x = x_next if config.return_trajectory else None
         return (x_next, eps_buf2, t_buf2), traj_x
 
+    grid = (
+        step_grid(ts)
+        if steps is None
+        else jnp.arange(n_steps, dtype=jnp.int32)
+    )
     (x, eps_buf, t_buf), traj_tail = jax.lax.scan(
-        step, (x, eps_buf, t_buf), step_grid(ts)
+        step, (x, eps_buf, t_buf), grid
     )
     aux = trajectory_aux(x_init, traj_tail, config.return_trajectory, dtype=dt)
     return SolverOutput(
@@ -240,18 +296,22 @@ class ExplicitAdamsProgram(SolverProgram):
     def num_buffers(self, cfg):
         return 2
 
+    def supports_steps(self, cfg):
+        return True
+
     def alloc_buffers(self, x_like, cfg, shardings=None):
         return alloc_buffers(x_like.astype(cfg.solver_dtype), cfg, shardings)
 
     def sample_scan(
         self, eps_fn, x_init, buffers, schedule, cfg, shardings=None,
-        lengths=None,
+        lengths=None, steps=None,
     ):
         # AB4's combine is elementwise over positions — no solver-side
         # sequence reductions to mask under `lengths`.
         eps_buf, t_buf = buffers
         return explicit_adams_scan(
-            eps_fn, x_init, eps_buf, t_buf, schedule, cfg, shardings=shardings
+            eps_fn, x_init, eps_buf, t_buf, schedule, cfg,
+            shardings=shardings, steps=steps,
         )
 
 
@@ -260,6 +320,13 @@ class ImplicitAdamsPECEProgram(SolverProgram):
 
     def num_buffers(self, cfg):
         return 2
+
+    def supports_steps(self, cfg):
+        return True
+
+    def steps_for_nfe(self, nfe, cfg):
+        # StepMask.active_steps counts PECE steps: 2 NFE buys one
+        return pece_num_steps(nfe)
 
     def validate(self, req, cfg, dp=1):
         super().validate(req, cfg, dp=dp)
@@ -279,11 +346,12 @@ class ImplicitAdamsPECEProgram(SolverProgram):
 
     def sample_scan(
         self, eps_fn, x_init, buffers, schedule, cfg, shardings=None,
-        lengths=None,
+        lengths=None, steps=None,
     ):
         # PECE's predictor/corrector math is elementwise over positions —
         # no solver-side sequence reductions to mask under `lengths`.
         eps_buf, t_buf = buffers
         return implicit_adams_pece_scan(
-            eps_fn, x_init, eps_buf, t_buf, schedule, cfg, shardings=shardings
+            eps_fn, x_init, eps_buf, t_buf, schedule, cfg,
+            shardings=shardings, steps=steps,
         )

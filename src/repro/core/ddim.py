@@ -14,7 +14,14 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core.program import SolverProgram, constrain_x, trajectory_aux
+from repro.core.program import (
+    SolverProgram,
+    StepMask,
+    constrain_x,
+    step_active,
+    step_row_times,
+    trajectory_aux,
+)
 from repro.core.schedules import NoiseSchedule, timesteps
 from repro.core.solver_base import (
     EpsFn,
@@ -31,19 +38,30 @@ def sample_scan(
     schedule: NoiseSchedule,
     config: SolverConfig,
     shardings=None,
+    steps: StepMask | None = None,
 ) -> SolverOutput:
     n = config.nfe
-    ts = timesteps(schedule, n, config.scheme, t_end=config.t_end)
     x = constrain_x(x_init, shardings)
 
     def step(carry, inp):
         x = carry
-        _i, t_cur, t_next = inp
+        if steps is None:
+            _i, t_cur, t_next = inp
+        else:
+            # mixed-NFE batch: each row reads its own grid, and a row
+            # whose steps are spent keeps its latents bitwise unchanged
+            t_cur, t_next = step_row_times(steps, inp, x.ndim)
         eps = eps_fn(x, t_cur)
         x_next = ddim_step(schedule, x, eps, t_cur, t_next)
+        if steps is not None:
+            x_next = jnp.where(step_active(steps, inp, x.ndim), x_next, x)
         return x_next, (x_next if config.return_trajectory else None)
 
-    x, traj_tail = jax.lax.scan(step, x, step_grid(ts))
+    if steps is None:
+        grid = step_grid(timesteps(schedule, n, config.scheme, t_end=config.t_end))
+    else:
+        grid = jnp.arange(n, dtype=jnp.int32)
+    x, traj_tail = jax.lax.scan(step, x, grid)
     aux = trajectory_aux(x_init, traj_tail, config.return_trajectory)
     return SolverOutput(x0=x, nfe=jnp.int32(n), aux=aux)
 
@@ -60,12 +78,17 @@ def sample(
 class DDIMProgram(SolverProgram):
     name = "ddim"
 
+    def supports_steps(self, cfg):
+        return True
+
     def sample_scan(
         self, eps_fn, x_init, buffers, schedule, cfg, shardings=None,
-        lengths=None,
+        lengths=None, steps=None,
     ):
         # DDIM's update is elementwise over positions, so a right-padded
         # batch needs no solver-side masking (`lengths` is the denoiser's
         # concern); accepted for the uniform program surface.
         assert not buffers
-        return sample_scan(eps_fn, x_init, schedule, cfg, shardings=shardings)
+        return sample_scan(
+            eps_fn, x_init, schedule, cfg, shardings=shardings, steps=steps
+        )

@@ -1,0 +1,267 @@
+"""Adaptive DPM-Solver — PID-controlled accept/reject stepping under jit.
+
+The fixed-grid solvers spend their NFE budget on a schedule chosen ahead
+of time; this program instead *adapts* its step size to the local
+truncation error, the DPM-Solver-12 scheme of Lu et al. 2022a (Sec. 3.3)
+with the PID step-size controller popularized by k-diffusion:
+
+* each iteration advances in half-logSNR (lambda) space by a trial step
+  ``h``, computing an embedded order-1/2 pair that shares the first eps
+  evaluation — ``x_low`` (DPM-Solver-1) and ``x_high`` (DPM-Solver-2,
+  midpoint) — for 2 NFE per iteration;
+* the pairwise difference is normalized by ``delta = max(atol, rtol *
+  max(|x_low|, |x_prev|))`` and reduced to a per-row RMS error;
+* a PID controller turns the error into a step-size factor (limited by
+  ``1 + atan(f - 1)``) and an accept/reject decision (``factor >=
+  accept_safety``); rejected steps retry from the same state with the
+  shrunken ``h``.
+
+Serving adaptation: everything above runs as a **fixed-shape**
+``lax.scan`` with per-row early exit, so the program jit-compiles once per
+(sample-shape, nfe-bucket) like every other registry solver.  ``cfg.nfe``
+is the per-request NFE *budget*: the scan runs ``nfe // 2`` iterations and
+a row that converges earlier freezes bitwise (its remaining iterations are
+identity).  The per-row NFE actually spent is reported as the
+``realized_nfe`` aux (a ``(B,)`` int32), which the serving layer surfaces
+in each request's ``info``.  Mixed-NFE batches work through the same
+:class:`~repro.core.program.StepMask` channel as the fixed-grid solvers —
+``active_steps`` caps each row's *iterations* (the grid times are ignored;
+the controller chooses its own times).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.era import _seq_sq_sums
+from repro.core.program import SolverProgram, StepMask, constrain_x
+from repro.core.schedules import NoiseSchedule
+from repro.core.solver_base import EpsFn, SolverConfig, SolverOutput
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class AdaptiveDPMConfig(SolverConfig):
+    """Adaptive DPM-Solver options (defaults follow k-diffusion's
+    ``sample_dpm_adaptive``).  ``nfe`` is the eval *budget* (2 per
+    iteration), not a step count."""
+
+    rtol: float = 0.05           # relative tolerance
+    atol: float = 0.0078         # absolute tolerance
+    h_init: float = 0.35         # first trial step in lambda space
+    pcoeff: float = 0.0          # PID proportional coefficient
+    icoeff: float = 1.0          # PID integral coefficient
+    dcoeff: float = 0.0          # PID derivative coefficient
+    accept_safety: float = 0.81  # accept iff limited factor >= this
+    pid_eps: float = 1e-8        # guards 1/error
+    order: int = 2               # embedded pair order (PID normalization)
+
+
+def _row(v: Array, ndim: int) -> Array:
+    """Reshape a (B,) vector to broadcast over (B,) + trailing dims."""
+    return v.reshape(v.shape + (1,) * (ndim - 1))
+
+
+def sample_adaptive_scan(
+    eps_fn: EpsFn,
+    x_init: Array,
+    schedule: NoiseSchedule,
+    config: AdaptiveDPMConfig,
+    shardings=None,
+    lengths: Array | None = None,
+    steps: StepMask | None = None,
+) -> SolverOutput:
+    """The adaptive sampling loop as one fixed-shape XLA program.
+
+    Rows step independently: each keeps its own lambda position, trial
+    step size, PID error history, and done flag, so a batch mixes rows at
+    different points of their integration without any cross-row coupling.
+    """
+    n_iters = max(config.nfe // 2, 1)
+    dt = config.solver_dtype
+    b1 = (config.pcoeff + config.icoeff + config.dcoeff) / config.order
+    b2 = -(config.pcoeff + 2.0 * config.dcoeff) / config.order
+    b3 = config.dcoeff / config.order
+
+    t_begin = schedule.t_begin
+    t_end = schedule.t_end if config.t_end is None else config.t_end
+    # evaluate the lambda endpoints eagerly and pin them behind a barrier:
+    # the accept/reject thresholding must see the same floats under jit and
+    # eager (XLA's constant folder rounds transcendentals differently)
+    with jax.ensure_compile_time_eval():
+        lam0 = schedule.lam(jnp.float32(t_begin))
+        lam_end = schedule.lam(jnp.float32(t_end))
+    lam0 = jax.lax.optimization_barrier(lam0)
+    lam_end = jax.lax.optimization_barrier(lam_end)
+
+    x = constrain_x(x_init.astype(dt), shardings)
+    batch = x.shape[0]
+    ndim = x.ndim
+    if lengths is not None and ndim >= 3:
+        valid = jnp.arange(x.shape[1])[None, :] < lengths[:, None]
+        feat = 1
+        for d in x.shape[2:]:
+            feat *= d
+        numel = (lengths * feat).astype(jnp.float32)
+    else:
+        valid = None
+        numel = jnp.full((batch,), float(x[0].size), jnp.float32)
+
+    def body(carry, i):
+        x, x_prev, lam, h, e2, e3, seeded, done, spent = carry
+        cap = steps.active_steps if steps is not None else n_iters
+        act = jnp.logical_and(~done, i < cap)            # (B,)
+        actx = _row(act, ndim)
+
+        lam_next = jnp.minimum(lam + h, lam_end)
+        hh = lam_next - lam                              # (B,) actual step
+        t = schedule.inv_lam(lam)
+        t_next = schedule.inv_lam(lam_next)
+        s_mid = schedule.inv_lam(lam + 0.5 * hh)
+        tb, tnb, sb = _row(t, ndim), _row(t_next, ndim), _row(s_mid, ndim)
+        hb = _row(hh, ndim)
+
+        a_t = schedule.alpha(tb)
+        a_n, s_n = schedule.alpha(tnb), schedule.sigma(tnb)
+        a_s, s_s = schedule.alpha(sb), schedule.sigma(sb)
+
+        e_t = eps_fn(x, tb).astype(dt)
+        # DPM-Solver-1 (the low-order member shares e_t)
+        x_low = (a_n / a_t).astype(dt) * x - (
+            s_n * jnp.expm1(hb)
+        ).astype(dt) * e_t
+        # DPM-Solver-2, midpoint r1 = 1/2
+        u = (a_s / a_t).astype(dt) * x - (
+            s_s * jnp.expm1(0.5 * hb)
+        ).astype(dt) * e_t
+        e_s = eps_fn(u, sb).astype(dt)
+        x_high = x_low - (s_n * jnp.expm1(hb)).astype(dt) * (e_s - e_t)
+
+        delta = jnp.maximum(
+            config.atol,
+            config.rtol * jnp.maximum(jnp.abs(x_low), jnp.abs(x_prev)),
+        )
+        ratio = ((x_low - x_high) / delta).astype(jnp.float32)
+        err = jnp.sqrt(_seq_sq_sums(ratio, valid) / numel)  # (B,) RMS
+        inv_err = 1.0 / (err + config.pid_eps)
+
+        e2_eff = jnp.where(seeded, e2, inv_err)
+        e3_eff = jnp.where(seeded, e3, inv_err)
+        factor = inv_err**b1 * e2_eff**b2 * e3_eff**b3
+        factor = 1.0 + jnp.arctan(factor - 1.0)
+        accept = factor >= config.accept_safety          # (B,)
+        upd = jnp.logical_and(act, accept)
+        updx = _row(upd, ndim)
+
+        x_new = jnp.where(updx, x_high, x)
+        x_prev_new = jnp.where(updx, x_low, x_prev)
+        lam_new = jnp.where(upd, lam_next, lam)
+        h_new = jnp.where(act, h * factor, h)
+        e2_new = jnp.where(upd, inv_err, jnp.where(act, e2_eff, e2))
+        e3_new = jnp.where(upd, e2_eff, jnp.where(act, e3_eff, e3))
+        seeded_new = jnp.logical_or(seeded, act)
+        done_new = jnp.logical_or(
+            done, jnp.logical_and(upd, lam_next >= lam_end)
+        )
+        spent_new = spent + jnp.where(act, jnp.int32(2), jnp.int32(0))
+        traj_x = x_new if config.return_trajectory else None
+        return (
+            x_new, x_prev_new, lam_new, h_new,
+            e2_new, e3_new, seeded_new, done_new, spent_new,
+        ), traj_x
+
+    carry0 = (
+        x,
+        x,
+        jnp.full((batch,), lam0, jnp.float32),
+        jnp.full((batch,), config.h_init, jnp.float32),
+        jnp.zeros((batch,), jnp.float32),
+        jnp.zeros((batch,), jnp.float32),
+        jnp.zeros((batch,), bool),
+        jnp.zeros((batch,), bool),
+        jnp.zeros((batch,), jnp.int32),
+    )
+    grid = jnp.arange(n_iters, dtype=jnp.int32)
+    (x, _, _, _, _, _, _, _, spent), traj_tail = jax.lax.scan(
+        body, carry0, grid
+    )
+
+    aux: dict = {"realized_nfe": spent}
+    if config.return_trajectory and traj_tail is not None:
+        aux["trajectory"] = jnp.concatenate(
+            [x_init.astype(dt)[None], traj_tail], axis=0
+        )
+    return SolverOutput(
+        x0=x.astype(x_init.dtype), nfe=jnp.max(spent), aux=aux
+    )
+
+
+def sample(
+    eps_fn: EpsFn,
+    x_init: Array,
+    schedule: NoiseSchedule,
+    config: AdaptiveDPMConfig,
+) -> SolverOutput:
+    return sample_adaptive_scan(eps_fn, x_init, schedule, config)
+
+
+class AdaptiveDPMProgram(SolverProgram):
+    name = "dpm_adaptive"
+    config_cls = AdaptiveDPMConfig
+    aux_row_axes = {"trajectory": 1, "realized_nfe": 0}
+    aux_seq_axes = {"trajectory": 2}
+    aux_step_axes = {"trajectory": 0}
+
+    def per_sample_state(self, cfg):
+        # lambda position / step size / PID history are all (B,)
+        return True
+
+    def supports_steps(self, cfg):
+        return True
+
+    def steps_for_nfe(self, nfe, cfg):
+        # one adaptive iteration costs 2 NFE; active_steps caps iterations
+        return max(nfe // 2, 1)
+
+    def validate(self, req, cfg, dp=1):
+        super().validate(req, cfg, dp=dp)
+        if req.nfe < 2:
+            raise ValueError(
+                f"dpm_adaptive spends 2 NFE per accept/reject iteration, "
+                f"so its budget must be >= 2; got nfe={req.nfe}"
+            )
+        if cfg.rtol <= 0.0 or cfg.atol <= 0.0:
+            raise ValueError(
+                f"dpm_adaptive tolerances must be positive, got "
+                f"rtol={cfg.rtol}, atol={cfg.atol}"
+            )
+        if cfg.rtol < 1e-5 and cfg.atol < 1e-5:
+            raise ValueError(
+                f"dpm_adaptive tolerances rtol={cfg.rtol}, atol={cfg.atol} "
+                f"are below the serveable floor (1e-5): the controller "
+                f"cannot meet them within any finite NFE bucket, so the "
+                f"request would always exhaust its budget unconverged"
+            )
+        if cfg.accept_safety >= 1.0 + jnp.pi / 2:
+            raise ValueError(
+                f"dpm_adaptive accept_safety={cfg.accept_safety} exceeds "
+                f"the limiter ceiling 1 + pi/2: no step could ever be "
+                f"accepted"
+            )
+
+    def sample_scan(
+        self, eps_fn, x_init, buffers, schedule, cfg, shardings=None,
+        lengths=None, steps=None,
+    ):
+        # the error RMS is masked per row via `lengths` (pad positions
+        # contribute exact zeros through the sequential reduction), so
+        # mixed-seq-len fusion cannot perturb a row's accept decisions
+        assert not buffers
+        return sample_adaptive_scan(
+            eps_fn, x_init, schedule, cfg, shardings=shardings,
+            lengths=lengths, steps=steps,
+        )

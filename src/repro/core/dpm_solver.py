@@ -21,7 +21,13 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.core.program import SolverProgram, constrain_x, trajectory_aux
+from repro.core.program import (
+    SolverProgram,
+    StepMask,
+    constrain_x,
+    step_active,
+    trajectory_aux,
+)
 from repro.core.schedules import NoiseSchedule, timesteps
 from repro.core.solver_base import EpsFn, SolverConfig, SolverOutput, step_grid
 
@@ -93,6 +99,7 @@ def sample_pp2m_scan(
     schedule: NoiseSchedule,
     config: SolverConfig,
     shardings=None,
+    steps: StepMask | None = None,
 ) -> SolverOutput:
     """DPM-Solver++(2M) (Lu et al. 2022b) — the multistep data-prediction
     variant the paper benchmarks against on Stable Diffusion (Appendix E).
@@ -104,33 +111,69 @@ def sample_pp2m_scan(
     ``(x, x0_prev)`` — no history buffer beyond the previous x0 prediction.
     """
     n = config.nfe
-    ts = timesteps(schedule, n, "logsnr", t_end=config.t_end)
-    lam = schedule.lam(ts)
-    alpha, sigma = schedule.alpha(ts), schedule.sigma(ts)
     dt = config.solver_dtype
+    if steps is None:
+        # `timesteps` returns an optimization-barrier'd grid, so these
+        # coefficient maps evaluate at runtime — exactly like the
+        # step-masked path's maps over runtime StepMask rows
+        ts = timesteps(schedule, n, "logsnr", t_end=config.t_end)
+        lam = schedule.lam(ts)
+        alpha, sigma = schedule.alpha(ts), schedule.sigma(ts)
+        grid = step_grid(ts)
+    else:
+        # per-row grids: coefficients are computed per step from the
+        # gathered (B, 1, ..) time columns (like ddim's step-masked path),
+        # NOT gathered from a precomputed (B, n+1) map — a full-matrix
+        # transcendental evaluation rounds differently at different batch
+        # buckets, which would let scheduler batch composition leak
+        # last-ulp differences into results
+        grid = jnp.arange(n, dtype=jnp.int32)
 
     x = constrain_x(x_init.astype(dt), shardings)
 
+    def _col(arr, j):
+        # row-broadcastable column j of a per-row (B, n+1) coefficient map
+        c = jax.lax.dynamic_index_in_dim(arr, j, axis=1, keepdims=False)
+        return c.reshape((-1,) + (1,) * (x_init.ndim - 1))
+
     def step(carry, inp):
         x, x0_prev = carry
-        i, t_cur, _t_next = inp
+        if steps is None:
+            i, t_cur, _t_next = inp
+            l_i, l_ip1 = lam[i], lam[i + 1]
+            l_im1 = lam[jnp.maximum(i - 1, 0)]
+            a_i, a_ip1 = alpha[i], alpha[i + 1]
+            s_i, s_ip1 = sigma[i], sigma[i + 1]
+        else:
+            i = inp
+            t_cur = _col(steps.ts, i)
+            t_ip1 = _col(steps.ts, i + 1)
+            t_im1 = _col(steps.ts, jnp.maximum(i - 1, 0))
+            l_i, l_ip1 = schedule.lam(t_cur), schedule.lam(t_ip1)
+            l_im1 = schedule.lam(t_im1)
+            a_i, a_ip1 = schedule.alpha(t_cur), schedule.alpha(t_ip1)
+            s_i, s_ip1 = schedule.sigma(t_cur), schedule.sigma(t_ip1)
         e = eps_fn(x, t_cur).astype(dt)
-        x0 = (x - sigma[i].astype(dt) * e) / alpha[i].astype(dt)
-        h = lam[i + 1] - lam[i]
-        h_prev = lam[i] - lam[jnp.maximum(i - 1, 0)]
+        x0 = (x - s_i.astype(dt) * e) / a_i.astype(dt)
+        h = l_ip1 - l_i
+        h_prev = l_i - l_im1
         r = h_prev / h
         use_ms = i > 0
         coef = jnp.where(use_ms, 1.0 / (2.0 * jnp.where(use_ms, r, 1.0)), 0.0)
         d = (1.0 + coef).astype(dt) * x0 - coef.astype(dt) * x0_prev
-        x_next = (sigma[i + 1] / sigma[i]).astype(dt) * x - (
-            alpha[i + 1] * jnp.expm1(-h)
+        x_next = (s_ip1 / s_i).astype(dt) * x - (
+            a_ip1 * jnp.expm1(-h)
         ).astype(dt) * d
+        if steps is not None:
+            # spent rows freeze bitwise — including the multistep x0 carry
+            # (their padded-grid h is 0, which would NaN the combine)
+            act = step_active(steps, i, x.ndim)
+            x_next = jnp.where(act, x_next, x)
+            x0 = jnp.where(act, x0, x0_prev)
         traj_x = x_next if config.return_trajectory else None
         return (x_next, x0), traj_x
 
-    (x, _), traj_tail = jax.lax.scan(
-        step, (x, jnp.zeros_like(x)), step_grid(ts)
-    )
+    (x, _), traj_tail = jax.lax.scan(step, (x, jnp.zeros_like(x)), grid)
     aux = trajectory_aux(x_init, traj_tail, config.return_trajectory, dtype=dt)
     return SolverOutput(x0=x.astype(x_init.dtype), nfe=jnp.int32(n), aux=aux)
 
@@ -205,14 +248,24 @@ class DPMpp2MProgram(SolverProgram):
                 f"nfe={req.nfe}"
             )
 
+    def supports_steps(self, cfg):
+        return True
+
+    def step_times(self, schedule, nfe, cfg):
+        # the pp2m scan pins its grid to logSNR spacing regardless of
+        # cfg.scheme — StepMask rows must carry those exact floats
+        return timesteps(schedule, nfe, "logsnr", t_end=cfg.t_end)
+
     def sample_scan(
         self, eps_fn, x_init, buffers, schedule, cfg, shardings=None,
-        lengths=None,
+        lengths=None, steps=None,
     ):
         # DPM++(2M)'s multistep combine is elementwise over positions — no
         # solver-side sequence reductions to mask under `lengths`.
         assert not buffers
-        return sample_pp2m_scan(eps_fn, x_init, schedule, cfg, shardings=shardings)
+        return sample_pp2m_scan(
+            eps_fn, x_init, schedule, cfg, shardings=shardings, steps=steps
+        )
 
 
 class DPMSolverProgram(SolverProgram):
@@ -229,11 +282,14 @@ class DPMSolverProgram(SolverProgram):
 
     def sample_scan(
         self, eps_fn, x_init, buffers, schedule, cfg, shardings=None,
-        lengths=None,
+        lengths=None, steps=None,
     ):
         # singlestep DPM updates are elementwise over positions — no
-        # solver-side sequence reductions to mask under `lengths`.
+        # solver-side sequence reductions to mask under `lengths`.  The
+        # mixed-order plan is Python-unrolled per NFE, so there is no
+        # step-masked variant (supports_steps stays False).
         assert not buffers
+        assert steps is None, f"{self.name} does not support step masking"
         x = constrain_x(x_init, shardings)
         out = self._sample(eps_fn, x, schedule, cfg)
         return out

@@ -48,7 +48,12 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import lagrange
-from repro.core.program import SolverProgram
+from repro.core.program import (
+    SolverProgram,
+    StepMask,
+    step_active,
+    step_row_times,
+)
 from repro.core.schedules import NoiseSchedule, timesteps
 from repro.core.solver_base import (
     EpsFn,
@@ -229,11 +234,19 @@ def sample_scan(
                                    # padded mixed-seq-len batch; masks the
                                    # ERS error norms so pad positions can
                                    # never flip a basis selection
+    steps: StepMask | None = None,  # mixed-NFE channel: per-row step
+                                    # counts + per-row time grids; a row's
+                                    # carry freezes bitwise once spent
 ) -> SolverOutput:
     n = config.nfe
     k = config.k
     if n < k:
         raise ValueError(f"ERA-Solver needs nfe >= k ({n} < {k})")
+    if steps is not None and not config.per_sample:
+        raise ValueError(
+            "mixed-NFE step masking needs per-sample ERS (per_sample=True):"
+            " a shared delta_eps would couple rows with different horizons"
+        )
     if lengths is not None and x_init.ndim < 3:
         raise ValueError(
             "lengths masking needs batch-of-sequences latents (B, S, ...); "
@@ -245,7 +258,15 @@ def sample_scan(
         )
     if t_buf.shape != (n + 1,):
         raise ValueError(f"t buffer shape {t_buf.shape} != {(n + 1,)}")
-    ts = timesteps(schedule, n, config.scheme, t_end=config.t_end)
+    if steps is None:
+        ts = timesteps(schedule, n, config.scheme, t_end=config.t_end)
+        t0 = ts[0]
+    else:
+        # each row starts on its own grid; the shared t_buf goes unused
+        # under step masking (Lagrange node times gather from steps.ts,
+        # which holds exactly the floats an exact run appends to t_buf)
+        ts = None
+        t0 = steps.ts[:, 0].reshape((-1,) + (1,) * (x_init.ndim - 1))
     dt = config.solver_dtype
     kops = _fused_ops() if config.use_fused_update else None
     am4 = jnp.asarray(AM4, jnp.float32)
@@ -262,8 +283,11 @@ def sample_scan(
         t_buf = jax.lax.with_sharding_constraint(t_buf, shardings.t_buf)
     # Alg. 1 line 2/3: delta_eps initialized to lambda (power = 1, uniform
     # selection); initial observation appended at index 0.
-    e0 = eps_fn(x, ts[0]).astype(dt)
-    eps_buf, t_buf = buffer_append(eps_buf, t_buf, jnp.int32(0), e0, ts[0])
+    e0 = eps_fn(x, t0).astype(dt)
+    eps_buf, t_buf = buffer_append(
+        eps_buf, t_buf, jnp.int32(0), e0,
+        jnp.float32(0.0) if steps is not None else ts[0],
+    )
     delta_eps = (
         jnp.full((x.shape[0],), config.lam, jnp.float32)
         if config.per_sample
@@ -301,7 +325,14 @@ def sample_scan(
                     i, k, d, config.lam, config.selection, config.const_power
                 )
             )(de)                                            # (B, k)
-            t_sel = jnp.take(t_buf, tau, axis=0)             # (B, k)
+            if steps is None:
+                t_sel = jnp.take(t_buf, tau, axis=0)         # (B, k)
+            else:
+                # per-row grids: node times come from the row's own grid
+                # (identical floats to the exact run's t_buf entries)
+                t_sel = jax.vmap(
+                    lambda ts_r, tau_r: jnp.take(ts_r, tau_r, axis=0)
+                )(steps.ts, tau)                             # (B, k)
             # per-sample gather from the (cap, B, ...) buffer
             eps_sel = jax.vmap(
                 lambda tau_b, buf_b: jnp.take(buf_b, tau_b, axis=0),
@@ -309,19 +340,35 @@ def sample_scan(
                 out_axes=0,
             )(tau, eps_buf)                                  # (B, k, ...)
             e_hist_b = jnp.moveaxis(e_hist, 1, 0)            # (B, 3, ...)
+            cx, ce = schedule.ddim_coeffs(t_cur, t_next)
             if kops is not None:
                 # fused per-sample step: vmap the Pallas kernel over the
-                # batch (each element carries its own Lagrange nodes)
-                cx, ce = schedule.ddim_coeffs(t_cur, t_next)
-                x_next, eps_bar = jax.vmap(
-                    lambda xb, es, tn, eh: kops.era_step(
-                        xb, es, tn, eh, t_next, cx, ce, am4
+                # batch (each element carries its own Lagrange nodes; with
+                # per-row grids, also its own times and DDIM coefficients)
+                if steps is None:
+                    x_next, eps_bar = jax.vmap(
+                        lambda xb, es, tn, eh: kops.era_step(
+                            xb, es, tn, eh, t_next, cx, ce, am4
+                        )
+                    )(x, eps_sel, t_sel, e_hist_b)
+                else:
+                    x_next, eps_bar = jax.vmap(
+                        lambda xb, es, tn, eh, tnb, cxb, ceb: kops.era_step(
+                            xb, es, tn, eh, tnb, cxb, ceb, am4
+                        )
+                    )(
+                        x, eps_sel, t_sel, e_hist_b,
+                        t_next.reshape(-1), cx.reshape(-1), ce.reshape(-1),
                     )
-                )(x, eps_sel, t_sel, e_hist_b)
                 return x_next, eps_bar, tau
-            eps_bar, eps_corr = jax.vmap(
-                era_combine, in_axes=(0, 0, 0, None)
-            )(eps_sel, t_sel, e_hist_b, t_next)
+            if steps is None:
+                eps_bar, eps_corr = jax.vmap(
+                    era_combine, in_axes=(0, 0, 0, None)
+                )(eps_sel, t_sel, e_hist_b, t_next)
+            else:
+                eps_bar, eps_corr = jax.vmap(era_combine)(
+                    eps_sel, t_sel, e_hist_b, t_next.reshape(-1)
+                )
             x_next = ddim_step(schedule, x, eps_corr, t_cur, t_next)
             return x_next, eps_bar, tau
         tau = lagrange.select_bases(
@@ -343,20 +390,37 @@ def sample_scan(
 
     def step(carry, inp):
         x, eps_buf, t_buf, de = carry
-        i, t_cur, t_next = inp
+        if steps is None:
+            i, t_cur, t_next = inp
+        else:
+            i = inp
+            t_cur, t_next = step_row_times(steps, i, x.ndim)
         ops = (x, eps_buf, t_buf, de, i, t_cur, t_next)
         x_next, eps_bar, tau = jax.lax.cond(
             i < k - 1, warm_branch, main_branch, ops
         )
+        if steps is not None:
+            # a spent row's latents freeze bitwise for the rest of the scan
+            x_next = jnp.where(step_active(steps, i, x.ndim), x_next, x)
 
         # Observe eps at the new point — except on the final step, whose
         # x_next is the output (keeps total cost at exactly `nfe` evals).
+        # Under step masking the skip becomes per-row: each row's last
+        # *own* step appends zeros and keeps its delta_eps, exactly like
+        # the exact-shape run's final step (the whole-batch cond still
+        # spares the bucket's terminal eval).
         def observe(_):
             e_new = eps_fn(x_next, t_next).astype(dt)
             if config.per_sample:
                 de_new = _delta_eps_batch(e_new, eps_bar, valid)
             else:
                 de_new = _delta_eps(e_new, eps_bar, config.error_norm, valid)
+            if steps is not None:
+                obs = (i + 1) < steps.active_steps           # (B,)
+                e_new = jnp.where(
+                    obs.reshape((-1,) + (1,) * (e_new.ndim - 1)), e_new, 0.0
+                )
+                de_new = jnp.where(obs, de_new, de)
             return e_new, de_new
 
         def skip(_):
@@ -365,14 +429,20 @@ def sample_scan(
         e_new, de_new = jax.lax.cond(i + 1 < n, observe, skip, None)
         # Alg. 1 line 16: delta_eps only updates once predictions are real.
         de = jnp.where(i >= k - 1, de_new, de)
-        eps_buf, t_buf = buffer_append(eps_buf, t_buf, i + 1, e_new, t_next)
+        eps_buf, t_buf = buffer_append(
+            eps_buf, t_buf, i + 1, e_new,
+            jnp.float32(0.0) if steps is not None else t_next,
+        )
         traj_x = x_next if config.return_trajectory else None
         # per-sample: emit the raw (B,) errors and reduce after the scan, so
         # a batch-sharded run keeps the loop body free of collectives
         return (x_next, eps_buf, t_buf, de), (de, tau, traj_x)
 
+    grid = (
+        step_grid(ts) if steps is None else jnp.arange(n, dtype=jnp.int32)
+    )
     (x, eps_buf, t_buf, delta_eps), (de_hist, tau_hist, traj_tail) = (
-        jax.lax.scan(step, (x, eps_buf, t_buf, delta_eps), step_grid(ts))
+        jax.lax.scan(step, (x, eps_buf, t_buf, delta_eps), grid)
     )
     aux: dict[str, Any] = {}
     if config.per_sample:
@@ -406,6 +476,12 @@ class ERAProgram(SolverProgram):
         "delta_eps_history_per_sample": 1,
         "ers_selection_history": 1,
     }
+    aux_step_axes = {
+        "trajectory": 0,
+        "delta_eps_history": 0,
+        "delta_eps_history_per_sample": 0,
+        "ers_selection_history": 0,
+    }
 
     def engine_config(self) -> ERAConfig:
         # per-sample ERS isolates co-batched requests from each other
@@ -423,6 +499,13 @@ class ERAProgram(SolverProgram):
         and exact-shape runs agree bitwise); everything else — Lagrange
         predictor, AM4 corrector, DDIM update — is elementwise."""
         return True
+
+    def supports_steps(self, cfg: ERAConfig) -> bool:
+        """Mixed-NFE step masking needs per-sample ERS: each row carries
+        its own delta_eps and basis selections, so freezing a spent row
+        can never perturb a live one (a shared scalar delta_eps would
+        couple rows with different horizons)."""
+        return cfg.per_sample
 
     def validate(self, req, cfg: ERAConfig, dp: int = 1) -> None:
         super().validate(req, cfg, dp=dp)
@@ -447,18 +530,27 @@ class ERAProgram(SolverProgram):
 
     def sample_scan(
         self, eps_fn, x_init, buffers, schedule, cfg, shardings=None,
-        lengths=None,
+        lengths=None, steps=None,
     ):
         eps_buf, t_buf = buffers
         return sample_scan(
             eps_fn, x_init, eps_buf, t_buf, schedule, cfg,
-            shardings=shardings, lengths=lengths,
+            shardings=shardings, lengths=lengths, steps=steps,
         )
 
     def scope_aux(
-        self, aux: dict, off: int, batch: int, seq_len: int | None = None
+        self,
+        aux: dict,
+        off: int,
+        batch: int,
+        seq_len: int | None = None,
+        n_steps: int | None = None,
+        padded_steps: int | None = None,
     ) -> dict:
-        scoped = super().scope_aux(aux, off, batch, seq_len=seq_len)
+        scoped = super().scope_aux(
+            aux, off, batch, seq_len=seq_len,
+            n_steps=n_steps, padded_steps=padded_steps,
+        )
         if scoped is not aux and "delta_eps_history_per_sample" in scoped:
             # the batch-mean diagnostic must cover only this request's rows
             # (pad rows would dilute it; batch-mates would leak into it)

@@ -49,15 +49,61 @@ Concrete programs live next to their solver math (``DDIMProgram`` in
 
 from __future__ import annotations
 
-from typing import Any, Mapping
+from typing import Any, Mapping, NamedTuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.schedules import NoiseSchedule
+from repro.core.schedules import NoiseSchedule, timesteps
 from repro.core.solver_base import EpsFn, SolverConfig, SolverOutput
 
 Array = jax.Array
+
+
+class StepMask(NamedTuple):
+    """The mixed-NFE mask channel: per-row step activity for a batch whose
+    rows run different step counts inside one compiled scan.
+
+    The scan itself always runs the bucket's full ``n_steps`` iterations;
+    a row whose request needs fewer steps goes inert once its own count is
+    spent — step ``i`` is **active** for row ``r`` iff
+    ``i < active_steps[r]``, and an inactive step must leave that row's
+    entire carry (latents, history buffers, per-sample solver state)
+    bitwise unchanged.  Each row also carries its *own* time grid: row
+    ``r``'s real grid (``step_times`` for its exact NFE) occupies
+    ``ts[r, : active_steps[r] + 1]``, with the terminal time repeated
+    through the padded tail so inactive steps still see finite times.
+    Both arrays are built host-side by the serving executor with the same
+    ``timesteps`` call an exact-shape run uses, which is what makes the
+    active prefix of a padded row bitwise identical to the unpadded run.
+    """
+
+    #: (B,) int32 — per-row count of real solver steps
+    active_steps: Array
+    #: (B, n_steps + 1) float32 — per-row time grids, terminal-padded
+    ts: Array
+
+
+def step_active(steps: StepMask, i: Array, x_ndim: int = 3) -> Array:
+    """Per-row activity predicate for scan step ``i``, broadcastable
+    against ``(B,) + trailing`` carries: shape ``(B,) + (1,) * (x_ndim-1)``."""
+    act = i < steps.active_steps
+    return act.reshape(act.shape + (1,) * (x_ndim - 1))
+
+
+def step_row_times(steps: StepMask, i: Array, x_ndim: int = 3):
+    """Row times ``(t_cur, t_next)`` for scan step ``i`` under a step
+    mask, shaped ``(B,) + (1,) * (x_ndim - 1)`` so schedule coefficients
+    broadcast per row exactly like the scalar-time fast path."""
+    trail = (1,) * (x_ndim - 1)
+    t_cur = jax.lax.dynamic_index_in_dim(steps.ts, i, axis=1, keepdims=False)
+    t_next = jax.lax.dynamic_index_in_dim(
+        steps.ts, i + 1, axis=1, keepdims=False
+    )
+    return (
+        t_cur.reshape(t_cur.shape + trail),
+        t_next.reshape(t_next.shape + trail),
+    )
 
 
 class SolverProgram:
@@ -72,6 +118,9 @@ class SolverProgram:
     aux_row_axes: Mapping[str, int] = {"trajectory": 1}
     #: aux keys whose value carries the padded sequence on the given axis
     aux_seq_axes: Mapping[str, int] = {"trajectory": 2}
+    #: aux keys whose value is stacked over scan steps on the given axis
+    #: (scoped to a request's real step count under NFE bucketing)
+    aux_step_axes: Mapping[str, int] = {"trajectory": 0}
 
     # ---- configs ---------------------------------------------------------
     def default_config(self, **kw) -> SolverConfig:
@@ -107,6 +156,37 @@ class SolverProgram:
         whose per-step math reduces over the sequence (ERA's ERS error
         norm) must mask that reduction to return True."""
         return True
+
+    def supports_steps(self, cfg: SolverConfig) -> bool:
+        """Can this program run a mixed-NFE batch under a :class:`StepMask`
+        — scanning to a bucketed max step count with per-row activity —
+        such that a row's active steps compute exactly what an exact-NFE
+        run would, and its inactive steps leave its carry bitwise
+        unchanged?  Requires the scan form (Python-unrolled solvers whose
+        step *plan* depends on the NFE, like dpm_solver_fast, cannot) plus
+        per-row times threaded through every schedule coefficient."""
+        return False
+
+    def steps_for_nfe(self, nfe: int, cfg: SolverConfig) -> int:
+        """How many scan steps a request with NFE budget ``nfe`` runs
+        (PECE spends 2 NFE per step; the adaptive program turns the budget
+        into an iteration cap).  This is the unit ``StepMask.active_steps``
+        counts in — scan steps, not NFE."""
+        return nfe
+
+    def step_times(
+        self, schedule: NoiseSchedule, nfe: int, cfg: SolverConfig
+    ) -> Array:
+        """The exact time grid a request with budget ``nfe`` steps through
+        — ``(steps_for_nfe(nfe) + 1,)`` decreasing.  The serving executor
+        builds each row of ``StepMask.ts`` with this hook so a padded
+        row's grid prefix is the very floats the unpadded run uses;
+        programs that pin a scheme in their scan (DPM++'s logsnr grid)
+        override it to match."""
+        return timesteps(
+            schedule, self.steps_for_nfe(nfe, cfg), cfg.scheme,
+            t_end=cfg.t_end,
+        )
 
     def validate(self, req: Any, cfg: SolverConfig, dp: int = 1) -> None:
         """Reject an illegal request at submit time.  ``req`` needs
@@ -201,6 +281,7 @@ class SolverProgram:
         cfg: SolverConfig,
         shardings=None,
         lengths: Array | None = None,
+        steps: StepMask | None = None,
     ) -> SolverOutput:
         """The solver loop as one XLA program, with ``buffers`` threaded in
         explicitly so a jitting caller can donate them.
@@ -209,7 +290,13 @@ class SolverProgram:
         int32 vector of valid sequence lengths for a right-padded batch
         (None = every position valid).  Programs whose math is elementwise
         over positions may ignore it; programs with sequence reductions
-        must mask them (see :meth:`supports_lengths`)."""
+        must mask them (see :meth:`supports_lengths`).
+
+        ``steps`` is the mixed-NFE mask channel (see :class:`StepMask`):
+        when given, the scan runs ``cfg.nfe``'s bucketed step count, each
+        row reads its times from its own ``steps.ts`` row, and a row's
+        carry freezes bitwise once ``i >= steps.active_steps[row]``.  Only
+        programs returning True from :meth:`supports_steps` receive it."""
         raise NotImplementedError
 
     def sample(
@@ -227,7 +314,13 @@ class SolverProgram:
 
     # ---- aux scoping -----------------------------------------------------
     def scope_aux(
-        self, aux: dict, off: int, batch: int, seq_len: int | None = None
+        self,
+        aux: dict,
+        off: int,
+        batch: int,
+        seq_len: int | None = None,
+        n_steps: int | None = None,
+        padded_steps: int | None = None,
     ) -> dict:
         """Scope solver diagnostics to one request's rows inside a fused
         padded batch, per :attr:`aux_row_axes` — and, for a seq-bucketed
@@ -235,7 +328,13 @@ class SolverProgram:
         (``seq_len`` = the request's unpadded length; None = the batch ran
         at the request's exact shape).  A co-batched request must see only
         its own rows and positions — not its batch-mates' (tenant
-        isolation), not the pad rows, and not the pad positions."""
+        isolation), not the pad rows, and not the pad positions.
+
+        Under NFE bucketing the scan ran ``padded_steps`` iterations but
+        this request only took ``n_steps`` real ones, so every
+        :attr:`aux_step_axes` entry drops its ``padded_steps - n_steps``
+        inert tail along its step axis (preserving any off-by-one framing
+        like the trajectory's initial-state frame)."""
         row_hit = {
             k: ax for k, ax in self.aux_row_axes.items()
             if aux.get(k) is not None
@@ -248,7 +347,20 @@ class SolverProgram:
                 if aux.get(k) is not None
             }
         )
-        if not row_hit and not seq_hit:
+        pad_steps = (
+            0
+            if n_steps is None or padded_steps is None
+            else padded_steps - n_steps
+        )
+        step_hit = (
+            {}
+            if pad_steps <= 0
+            else {
+                k: ax for k, ax in self.aux_step_axes.items()
+                if aux.get(k) is not None
+            }
+        )
+        if not row_hit and not seq_hit and not step_hit:
             return aux
         scoped = dict(aux)
         for key, axis in row_hit.items():
@@ -256,6 +368,10 @@ class SolverProgram:
             scoped[key] = scoped[key][idx]
         for key, axis in seq_hit.items():
             idx = (slice(None),) * axis + (slice(0, seq_len),)
+            scoped[key] = scoped[key][idx]
+        for key, axis in step_hit.items():
+            keep = scoped[key].shape[axis] - pad_steps
+            idx = (slice(None),) * axis + (slice(0, keep),)
             scoped[key] = scoped[key][idx]
         return scoped
 

@@ -17,7 +17,7 @@ from __future__ import annotations
 
 from typing import Callable
 
-from repro.core import adams, ddim, dpm_solver, era
+from repro.core import adams, ddim, dpm_adaptive, dpm_solver, era
 from repro.core.program import SolverProgram
 from repro.core.solver_base import SolverConfig, SolverOutput
 
@@ -35,6 +35,7 @@ _PROGRAMS: dict[str, SolverProgram] = {
         "dpm_solver_fast", order=3, fast=True
     ),
     "dpm_solver_pp2m": dpm_solver.DPMpp2MProgram(),
+    "dpm_adaptive": dpm_adaptive.AdaptiveDPMProgram(),
     # the paper's contribution (+ its Table-4 "fixed" ablation)
     "era": era.ERAProgram(),
 }

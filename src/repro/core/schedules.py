@@ -168,18 +168,33 @@ def timesteps(
     t_begin: float | None = None,
     t_end: float | None = None,
 ) -> Array:
-    """Return (num_steps + 1,) decreasing times from t_begin to t_end."""
+    """Return (num_steps + 1,) decreasing times from t_begin to t_end.
+
+    All inputs are concrete, so the grid is forced to compile-time (eager)
+    evaluation even when called mid-trace: a jitted program must embed the
+    exact same floats a host-side caller (e.g. the executor building
+    per-row ``StepMask`` grids) computes, not whatever XLA's constant
+    folder produces for the staged-out construction.  The result is then
+    wrapped in an ``optimization_barrier`` so downstream schedule
+    transcendentals (``alpha``/``sigma``/``lam`` of grid times) evaluate
+    at *runtime* under jit — XLA's constant folder rounds those chains
+    differently than the runtime kernels, and mixed-NFE step masking
+    (grids as runtime :class:`~repro.core.program.StepMask` inputs) must
+    stay bitwise identical to the constant-grid fast path."""
     t0 = schedule.t_begin if t_begin is None else t_begin
     t1 = schedule.t_end if t_end is None else t_end
-    if scheme == "uniform":
-        return jnp.linspace(t0, t1, num_steps + 1)
-    if scheme == "quadratic":
-        u = jnp.linspace(math.sqrt(t0), math.sqrt(t1), num_steps + 1)
-        return u**2
-    if scheme == "logsnr":
-        lam0, lam1 = schedule.lam(jnp.float32(t0)), schedule.lam(jnp.float32(t1))
-        lams = jnp.linspace(lam0, lam1, num_steps + 1)
-        ts = schedule.inv_lam(lams)
-        # pin the endpoints exactly
-        return ts.at[0].set(t0).at[-1].set(t1)
-    raise ValueError(f"unknown timestep scheme {scheme!r}")
+    with jax.ensure_compile_time_eval():
+        if scheme == "uniform":
+            ts = jnp.linspace(t0, t1, num_steps + 1)
+        elif scheme == "quadratic":
+            u = jnp.linspace(math.sqrt(t0), math.sqrt(t1), num_steps + 1)
+            ts = u**2
+        elif scheme == "logsnr":
+            lam0 = schedule.lam(jnp.float32(t0))
+            lam1 = schedule.lam(jnp.float32(t1))
+            lams = jnp.linspace(lam0, lam1, num_steps + 1)
+            # pin the endpoints exactly
+            ts = schedule.inv_lam(lams).at[0].set(t0).at[-1].set(t1)
+        else:
+            raise ValueError(f"unknown timestep scheme {scheme!r}")
+    return jax.lax.optimization_barrier(ts)

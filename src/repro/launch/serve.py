@@ -78,6 +78,11 @@ def _engine_config(
         if args.seq_buckets
         else None
     )
+    nfe_buckets = (
+        tuple(int(x) for x in args.nfe_buckets.split(","))
+        if args.nfe_buckets
+        else None
+    )
     batch_buckets = tuple(int(x) for x in args.batch_buckets.split(","))
     return EngineConfig(
         solver=args.solver,
@@ -87,6 +92,7 @@ def _engine_config(
         per_sample=per_sample,
         batch_buckets=batch_buckets if fused else None,
         seq_buckets=seq_buckets if fused else None,
+        nfe_buckets=nfe_buckets if fused else None,
         warmup="grid" if (fused and args.warm) else "none",
         warmup_nfes=(
             tuple(int(x) for x in args.warmup_nfes.split(","))
@@ -119,12 +125,19 @@ def run_continuous(dlm, params, args) -> None:
     several registry solvers — each request routes to its own solver's
     program inside one engine (per-(solver, seq, nfe) fuse queues).  With
     ``--seq-buckets`` + ``--seq-mix-lens``, requests of different lengths
-    fuse into shared length-masked batches (see docs/serving.md)."""
+    fuse into shared length-masked batches; with ``--nfe-buckets`` +
+    ``--nfe-mix-nfes``, requests of different step budgets fuse into
+    shared step-masked batches (see docs/serving.md)."""
     mix = [s.strip() for s in args.mix.split(",")] if args.mix else [args.solver]
     lens = (
         [int(x) for x in args.seq_mix_lens.split(",")]
         if args.seq_mix_lens
         else [args.seq]
+    )
+    nfes = (
+        [int(x) for x in args.nfe_mix_nfes.split(",")]
+        if args.nfe_mix_nfes
+        else [args.nfe]
     )
     cfg = _engine_config(
         args, per_sample=True, fused=True, warmup_seq_lens=tuple(lens)
@@ -144,7 +157,8 @@ def run_continuous(dlm, params, args) -> None:
             lambda i: futures.append(
                 sched.submit(
                     SampleRequest(
-                        batch=1, seq_len=lens[i % len(lens)], nfe=args.nfe,
+                        batch=1, seq_len=lens[i % len(lens)],
+                        nfe=nfes[i % len(nfes)],
                         solver=mix[i % len(mix)], seed=args.seed + i,
                     )
                 )
@@ -324,6 +338,20 @@ def main() -> None:
         default=None,
         help="comma-separated seq_lens the --continuous stream cycles "
         "through (default: --seq only)",
+    )
+    ap.add_argument(
+        "--nfe-buckets",
+        default=None,
+        help="comma-separated NFE-bucket ladder for the fused "
+        "(--continuous/--listen) engine (mixed-NFE fusion with per-row "
+        "step masks; requests above the top bucket are rejected), e.g. "
+        "'12,25'",
+    )
+    ap.add_argument(
+        "--nfe-mix-nfes",
+        default=None,
+        help="comma-separated NFE budgets the --continuous stream cycles "
+        "through (default: --nfe only)",
     )
     ap.add_argument("--max-wait-ms", type=float, default=25.0)
     ap.add_argument(

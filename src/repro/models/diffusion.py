@@ -92,7 +92,10 @@ class DiffusionLM:
         self, params: dict, x_t: Array, t: Array,
         lengths: Array | None = None,
     ) -> Array:
-        """Noise prediction eps_theta(x_t, t). x_t: (B, S, d); t scalar.
+        """Noise prediction eps_theta(x_t, t). x_t: (B, S, d); t a scalar
+        shared by the batch, or per-row times shaped (B,) / (B, 1, 1)
+        (mixed-NFE and adaptive solvers condition each row on its own
+        time).
 
         ``lengths`` ((B,) int32) marks per-row right-padding: pad keys are
         masked out of every attention softmax (valid positions see exactly
@@ -100,7 +103,7 @@ class DiffusionLM:
         positions, so a padded row's tail stays inert and bounded across a
         whole sampling run instead of evolving garbage."""
         cfg = self.config
-        tcond = L.time_mlp(params["time_mlp"], jnp.atleast_1d(t))  # (1, d)
+        tcond = L.time_mlp(params["time_mlp"], jnp.reshape(t, (-1,)))  # (1|B, d)
         h = L.linear(params["in_proj"], x_t.astype(cfg.dtype))
         h = h + tcond[:, None, :].astype(h.dtype)
         h, _ = self.model.backbone(

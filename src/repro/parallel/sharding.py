@@ -65,7 +65,11 @@ class SamplerSpecs(NamedTuple):
     per-sample solver state ``delta_eps`` ((B,) for per-sample ERS, scalar
     otherwise).  ``lengths`` places the mixed-seq-len path's per-row (B,)
     valid-length vector batch-aligned with its rows, so the masked error
-    norms stay shard-local.  Programs read the fields their carry uses and
+    norms stay shard-local.  ``active_steps`` / ``step_ts`` are the
+    mixed-NFE path's :class:`~repro.core.program.StepMask` channel: the
+    per-row (B,) step counts and (B, n_steps + 1) per-row time grids shard
+    batch-aligned with their rows, so each shard reads only its own rows'
+    grids and activity.  Programs read the fields their carry uses and
     ignore the rest (DDIM touches only ``x``; DPM++(2M)'s ``x0_prev``
     shards like ``x``).
     """
@@ -75,6 +79,8 @@ class SamplerSpecs(NamedTuple):
     t_buf: P
     delta_eps: P
     lengths: P
+    active_steps: P
+    step_ts: P
 
 
 class SamplerShardings(NamedTuple):
@@ -85,6 +91,8 @@ class SamplerShardings(NamedTuple):
     t_buf: NamedSharding
     delta_eps: NamedSharding
     lengths: NamedSharding
+    active_steps: NamedSharding
+    step_ts: NamedSharding
 
 
 def sampler_pspecs(
@@ -114,6 +122,8 @@ def sampler_pspecs(
         t_buf=P(),
         delta_eps=P(dp) if per_sample else P(),
         lengths=P(dp),
+        active_steps=P(dp),
+        step_ts=P(dp, None),
     )
 
 

@@ -95,6 +95,12 @@ class BatchedSampler:
     :class:`~repro.serving.executor.FusedExecutor`): requests whose
     ``seq_len`` differs fuse into one compiled batch, right-padded and
     length-masked, with exact-shape fallback when masking is unsupported.
+
+    ``nfe_buckets`` opts into mixed-NFE fusion the same way: requests
+    whose ``nfe`` differs fuse into one compiled batch that scans to the
+    bucketed max step count, with per-row step masks freezing each row
+    bitwise once its own budget is spent; solvers without a step-masked
+    scan fall back to exact-NFE grouping.
     """
 
     def __init__(
@@ -106,6 +112,7 @@ class BatchedSampler:
         batch_buckets: tuple[int, ...] | None = (1, 8, 64),
         mesh: Mesh | None = None,
         seq_buckets: tuple[int, ...] | None = None,
+        nfe_buckets: tuple[int, ...] | None = None,
         metrics: MetricsRegistry | None = None,
         max_batch: int | None = DEFAULT_MAX_BATCH,
         max_nfe: int | None = DEFAULT_MAX_NFE,
@@ -113,7 +120,8 @@ class BatchedSampler:
     ):
         self.executor = FusedExecutor(
             dlm, schedule, solver, solver_config, batch_buckets, mesh,
-            seq_buckets=seq_buckets, metrics=metrics,
+            seq_buckets=seq_buckets, nfe_buckets=nfe_buckets,
+            metrics=metrics,
             max_batch=max_batch, max_nfe=max_nfe, max_seq_len=max_seq_len,
         )
         self._queue_lock = threading.Lock()
@@ -153,6 +161,10 @@ class BatchedSampler:
     @property
     def seq_buckets(self) -> tuple[int, ...] | None:
         return self.executor.seq_buckets
+
+    @property
+    def nfe_buckets(self) -> tuple[int, ...] | None:
+        return self.executor.nfe_buckets
 
     @property
     def metrics(self) -> MetricsRegistry:

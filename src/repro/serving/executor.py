@@ -42,6 +42,29 @@ be guaranteed: non-fusable configs (exact-size runs can't pad), programs
 that don't support lengths, or denoisers whose block stack isn't maskable
 (``DiffusionLM.supports_length_masking``).
 
+**NFE bucketing** (``nfe_buckets=(16, 32, ...)``): requests whose ``nfe``
+differ can also fuse into one compiled batch.  The fuse key carries the
+request's NFE *bucket* (the smallest ladder entry >= its nfe), the
+compiled scan runs the bucket's step count, and a per-row
+:class:`~repro.core.program.StepMask` rides through the program: each
+row carries its own step count and its own time grid (the exact
+``step_times`` floats its unpadded run uses, terminal-padded), and a row
+whose steps are spent freezes **bitwise** — its remaining scan iterations
+leave its entire carry unchanged.  The jit cache and warmup grid are then
+bounded by ``|solvers| x |seq_buckets| x |nfe_buckets|`` instead of by
+distinct request NFEs.  With a ladder configured, *all* of a
+steps-capable solver's traffic routes through the step-masked program
+(uniform batches run fully active) — the bitwise invariance bar holds
+between step-masked runs at one padded batch bucket, so the engine never
+mixes the scalar-time static path into a bucketed stream.  Per-solver
+fallback to exact-NFE grouping mirrors seq bucketing: non-fusable
+configs, and programs without a step-masked scan
+(``SolverProgram.supports_steps``; e.g. the Python-unrolled
+``dpm_solver_fast`` plan), counted on ``sampler_masked_fallback_total``
+with ``impl="nfe-bucketing"``.  ``sampler_nfe_padding_rows_total``
+counts rows that ran a larger bucket than they asked for (the padding
+waste a too-coarse ladder buys).
+
 All mutable state (jit cache, shardings cache, param replication cache) is
 guarded by one re-entrant lock, and chunk execution itself is serialized
 under the same lock — concurrent ``drain()`` callers and the scheduler
@@ -66,7 +89,7 @@ import numpy as np
 from jax.sharding import Mesh
 
 from repro.core import NoiseSchedule, SolverConfig, get_program
-from repro.core.program import SolverProgram
+from repro.core.program import SolverProgram, StepMask
 from repro.models import attention as _attention
 from repro.models.diffusion import DiffusionLM
 from repro.parallel.sharding import (
@@ -173,6 +196,9 @@ class SampleResult:
     padded_batch: int        # batch bucket size the batch ran at
     padded_seq_len: int      # seq length the batch ran at (== seq bucket
                              # under seq bucketing, else the exact seq_len)
+    padded_nfe: int          # NFE budget the batch scanned to (== nfe
+                             # bucket under NFE bucketing, else exact nfe;
+                             # this request's surplus steps were inert)
 
     @property
     def info(self) -> dict[str, Any]:
@@ -183,6 +209,7 @@ class SampleResult:
             K.LATENCY_S: self.latency_s,
             K.PADDED_BATCH: self.padded_batch,
             K.PADDED_SEQ_LEN: self.padded_seq_len,
+            K.PADDED_NFE: self.padded_nfe,
             **self.aux,
         }
 
@@ -251,6 +278,7 @@ class FusedExecutor:
         batch_buckets: tuple[int, ...] | None = (1, 8, 64),
         mesh: Mesh | None = None,
         seq_buckets: tuple[int, ...] | None = None,
+        nfe_buckets: tuple[int, ...] | None = None,
         metrics: MetricsRegistry | None = None,
         max_batch: int | None = DEFAULT_MAX_BATCH,
         max_nfe: int | None = DEFAULT_MAX_NFE,
@@ -279,8 +307,14 @@ class FusedExecutor:
             batch_buckets = sorted({round_to_dp(b, mesh) for b in batch_buckets})
         self.batch_buckets = tuple(batch_buckets) if batch_buckets else None
         self.seq_buckets = tuple(sorted(seq_buckets)) if seq_buckets else None
+        self.nfe_buckets = tuple(sorted(nfe_buckets)) if nfe_buckets else None
         # per-solver verdict: may this solver's traffic seq-bucket at all?
         self._seq_masked: dict[str, bool] = {}
+        # per-solver verdict: may this solver's traffic nfe-bucket at all?
+        self._nfe_masked: dict[str, bool] = {}
+        # host-side (solver, nfe) -> per-row time grid cache (the StepMask
+        # rows every chunk of that solver/nfe reuses)
+        self._row_times: dict[tuple[str, int], np.ndarray] = {}
         self._jitted: dict[Any, Any] = {}
         self._shardings_cache: dict[Any, Any] = {}
         self._replicate = ParamReplicator(mesh) if mesh is not None else None
@@ -362,7 +396,16 @@ class FusedExecutor:
             "sampler_masked_fallback_total",
             "masked-traffic fast-path fallbacks by requested impl and "
             "reason: sdpa fast-kernel rewrites to chunked, and engine "
-            "seq-bucketing verdicts that force exact-shape grouping",
+            "seq-bucketing / nfe-bucketing verdicts that force exact-shape "
+            "or exact-NFE grouping",
+        )
+        # NFE-padding waste: real request rows that ran a larger nfe bucket
+        # than they asked for (their tail steps are per-row frozen no-ops).
+        # A ladder tuned to the traffic holds this near zero.
+        self._m_nfe_pad_rows = self.metrics.counter(
+            "sampler_nfe_padding_rows_total",
+            "request rows padded to a larger NFE bucket than requested "
+            "(per-row step masks freeze their surplus steps)",
         )
         # weakref so a dropped executor never keeps itself alive through the
         # module-level observer list; a dead ref unregisters itself on fire
@@ -458,19 +501,67 @@ class FusedExecutor:
             f"{self.seq_buckets[-1]}"
         )
 
+    # ---- NFE bucketing ---------------------------------------------------
+    def nfe_masked(self, solver: str | None) -> bool:
+        """Does this solver's traffic fuse across NFEs (scanning to the
+        bucketed step count under a per-row step mask), or fall back to
+        exact-NFE grouping?
+
+        Requires an engine nfe-bucket ladder, a fusable config (exact-size
+        runs cannot pad — in steps any more than in rows), and a program
+        with a step-masked scan (``SolverProgram.supports_steps``: per-row
+        times through every coefficient, spent rows frozen bitwise)."""
+        if not self.nfe_buckets:
+            return False
+        name = solver or self.solver_name
+        verdict = self._nfe_masked.get(name)
+        if verdict is None:
+            program = self.program_for(name)
+            cfg = self.config_for(name)
+            fusable = program.fusable(cfg)
+            steps_ok = program.supports_steps(cfg)
+            verdict = self._nfe_masked[name] = fusable and steps_ok
+            if not verdict:
+                # exact-NFE grouping is the engine-level slow path; count it
+                # on the same canary the seq-bucketing fallbacks feed
+                reason = (
+                    "non-fusable-config" if not fusable
+                    else "program-no-steps"
+                )
+                self._m_masked_fallback.inc(impl="nfe-bucketing", reason=reason)
+        return verdict
+
+    def bucket_nfe(self, n: int) -> int:
+        """Smallest nfe bucket >= n (requests above the ladder are rejected
+        at submit, so this never falls off the end)."""
+        for b in self.nfe_buckets:
+            if n <= b:
+                return b
+        raise ValueError(
+            f"nfe {n} exceeds the largest nfe bucket {self.nfe_buckets[-1]}"
+        )
+
     def group_key(self, req: SampleRequest) -> tuple[str, int, int]:
         """The fuse-group key ``(solver, seq, nfe)`` — what the sync
         drain's groups, the scheduler's queues, and the jit cache batch by.
         Under seq bucketing ``seq`` is the request's seq *bucket*, so
         mixed-length traffic shares a group and the compile count is
-        bounded by the ladder; otherwise it is the exact ``seq_len``."""
+        bounded by the ladder; otherwise it is the exact ``seq_len``.
+        Under NFE bucketing ``nfe`` is likewise the request's NFE *bucket*,
+        so mixed-NFE traffic shares a group (and one compiled, step-masked
+        program); otherwise it is the exact ``nfe``."""
         solver = self.resolve_solver(req)
         seq = (
             self.bucket_seq(req.seq_len)
             if self.seq_masked(solver)
             else req.seq_len
         )
-        return (solver, seq, req.nfe)
+        nfe = (
+            self.bucket_nfe(req.nfe)
+            if self.nfe_masked(solver)
+            else req.nfe
+        )
+        return (solver, seq, nfe)
 
     def validate(self, req: SampleRequest) -> None:
         """Reject an invalid request at submit time, not drain time — a bad
@@ -489,6 +580,15 @@ class FusedExecutor:
         if self.max_nfe is not None and req.nfe > self.max_nfe:
             raise ValueError(
                 f"nfe {req.nfe} exceeds the engine's max_nfe {self.max_nfe}"
+            )
+        if self.nfe_buckets and req.nfe > self.nfe_buckets[-1]:
+            # same serving contract as the seq ladder: an over-budget
+            # request would need its own compiled step count, which is
+            # exactly the fragmentation NFE bucketing exists to prevent
+            raise ValueError(
+                f"nfe {req.nfe} exceeds the largest nfe bucket "
+                f"{self.nfe_buckets[-1]}; extend nfe_buckets or submit "
+                f"requests within the ladder"
             )
         if self.seq_buckets and req.seq_len > self.seq_buckets[-1]:
             # the bucket ladder is the engine's serving contract: an
@@ -605,11 +705,26 @@ class FusedExecutor:
         with self._lock:
             self._run_chunk_locked(params, seq_len, nfe, chunk, results, pad)
 
+    def _step_times_host(self, solver: str, nfe: int) -> np.ndarray:
+        """The host-side per-row time grid for one (solver, nfe) — the
+        exact ``step_times`` floats an unpadded run of that budget steps
+        through, cached so chunk assembly never re-derives a grid."""
+        key = (solver, nfe)
+        ts = self._row_times.get(key)
+        if ts is None:
+            program = self.program_for(solver)
+            cfg = self.config_for(solver)
+            ts = self._row_times[key] = np.asarray(
+                program.step_times(self.schedule, nfe, cfg), np.float32
+            )
+        return ts
+
     def _run_chunk_locked(self, params, seq_len, nfe, chunk, results, pad):
         d = self.dlm.config.d_model
         solver = self.resolve_solver(chunk[0][1])
         program = self.program_for(solver)
         masked = self.seq_masked(solver)
+        stepped = self.nfe_masked(solver)
         total = sum(req.batch for _, req, _ in chunk)
         padded = self.bucket_batch(total) if pad else total
         # assemble the batch on the host: eager jnp.concatenate would XLA-
@@ -654,16 +769,56 @@ class FusedExecutor:
         )
 
         cfg = dataclasses.replace(self.config_for(solver), nfe=nfe)
+        # mixed-NFE fusion: assemble the per-row StepMask on the host.  The
+        # chunk's ``nfe`` is the group's NFE *bucket*; each request row
+        # carries its own step count and its own exact-NFE time grid
+        # (terminal-padded to the bucket's step count), so its active
+        # prefix computes the very floats its unpadded run would.  Batch
+        # pad rows run fully active on the bucket grid — ordinary masked
+        # math on zeros, never a 0-step edge case.
+        steps = None
+        if stepped:
+            cap = program.steps_for_nfe(nfe, cfg)
+            acts: list[int] = []
+            rows_ts: list[np.ndarray] = []
+            nfe_padded_rows = 0
+            for _, req, _ in chunk:
+                n_r = program.steps_for_nfe(req.nfe, cfg)
+                ts_r = self._step_times_host(solver, req.nfe)
+                if n_r < cap:
+                    ts_r = np.concatenate(
+                        [ts_r, np.full((cap - n_r,), ts_r[-1], np.float32)]
+                    )
+                    nfe_padded_rows += req.batch
+                acts += [n_r] * req.batch
+                rows_ts += [ts_r] * req.batch
+            if padded > total:
+                bucket_ts = self._step_times_host(solver, nfe)
+                acts += [cap] * (padded - total)
+                rows_ts += [bucket_ts] * (padded - total)
+            steps = StepMask(
+                active_steps=jnp.asarray(np.asarray(acts, np.int32)),
+                ts=jnp.asarray(np.stack(rows_ts, axis=0)),
+            )
+            if nfe_padded_rows:
+                self._m_nfe_pad_rows.inc(nfe_padded_rows, solver=solver)
         shardings = self._shardings(program, cfg, padded)
         if shardings is not None:
             x_init = jax.device_put(x_init, shardings.x)
             if lengths is not None:
                 lengths = jax.device_put(lengths, shardings.lengths)
+            if steps is not None:
+                steps = StepMask(
+                    active_steps=jax.device_put(
+                        steps.active_steps, shardings.active_steps
+                    ),
+                    ts=jax.device_put(steps.ts, shardings.step_ts),
+                )
             params = self._replicate(params)
-        run = self._jit_for(solver, cfg, padded, seq_len, masked, params)
+        run = self._jit_for(solver, cfg, padded, seq_len, masked, stepped, params)
         t0 = time.perf_counter()
         buffers = program.alloc_buffers(x_init, cfg, shardings)
-        x0, aux = run(params, x_init, lengths, *buffers)
+        x0, aux = run(params, x_init, lengths, steps, *buffers)
         x0 = jax.block_until_ready(x0)
         wall = time.perf_counter() - t0
         self._m_batches.inc()
@@ -682,18 +837,29 @@ class FusedExecutor:
             results[ticket] = SampleResult(
                 x0=x0_req,
                 aux=program.scope_aux(
-                    aux, off, req.batch, seq_len=scope_seq
+                    aux, off, req.batch, seq_len=scope_seq,
+                    # under NFE bucketing the scan ran the bucket's step
+                    # count; step-stacked aux drops this request's inert
+                    # tail so histories match the unpadded run's shape
+                    n_steps=(
+                        program.steps_for_nfe(req.nfe, cfg)
+                        if stepped else None
+                    ),
+                    padded_steps=(
+                        program.steps_for_nfe(nfe, cfg) if stepped else None
+                    ),
                 ),
                 latency_s=done - t_submit,
                 batch_wall_s=wall,
                 padded_batch=padded,
                 padded_seq_len=seq_len,
+                padded_nfe=nfe,
             )
             off += req.batch
 
     def _jit_for(
         self, solver: str, cfg: SolverConfig, batch: int, seq_len: int,
-        masked: bool, params,
+        masked: bool, stepped: bool, params,
     ):
         """One compiled executable per (solver, config, padded-batch,
         seq_len) bucket — with ``seq_len`` a ladder bucket under seq
@@ -709,11 +875,18 @@ class FusedExecutor:
         miss here *is* the compile, correctly labelled ``disk`` vs
         ``fresh``.
 
+        Under NFE bucketing the per-row :class:`StepMask` is likewise a
+        runtime argument (None on unstepped buckets): ``cfg.nfe`` is the
+        group's NFE *bucket*, so any mix of request NFEs within the bucket
+        reuses one executable and the cache stays bounded by
+        ``|solvers| x |seq_buckets| x |nfe_buckets|``.
+
         Mesh-aware: the key carries the data-parallel size so an engine
         rebuilt on a different mesh never aliases a cached program; it also
-        carries ``masked`` so an exact-shape group never aliases a masked
-        program of the same shape."""
-        key = (solver, cfg, batch, seq_len, self.dp, masked)
+        carries ``masked`` / ``stepped`` so an exact-shape or exact-NFE
+        group never aliases a masked/step-masked program of the same
+        shape."""
+        key = (solver, cfg, batch, seq_len, self.dp, masked, stepped)
         cached = self._jitted.get(key)
         if cached is not None:
             self._m_compile_hits.inc(solver=solver)
@@ -729,14 +902,14 @@ class FusedExecutor:
         ``key``.  Returns ``(compiled, source)`` with ``source`` ``"disk"``
         (served by the persistent compilation cache) or ``"fresh"`` (real
         XLA compile).  Callers hold the executor lock."""
-        solver, cfg, batch, seq_len, _, masked = key
+        solver, cfg, batch, seq_len, _, masked, stepped = key
         program = self.program_for(solver)
         shardings = self._shardings(program, cfg, batch)
         # eager pre-compile hook: probes that cannot run inside the jit
         # trace below (ERA's fused-kernel parity gate)
         program.pre_compile(cfg)
 
-        def run(params, x_init, lengths, *buffers):
+        def run(params, x_init, lengths, steps, *buffers):
             eps_fn = (
                 self.dlm.eps_fn(params)
                 if lengths is None
@@ -750,26 +923,32 @@ class FusedExecutor:
                 cfg,
                 shardings=shardings,
                 lengths=lengths,
+                steps=steps,
             )
             return out.x0, out.aux
 
         # donate x + the program's history buffers so XLA reuses them
         # in place (CPU ignores donation and would warn, so gate it);
-        # arg 2 (lengths) is never donated
+        # args 2/3 (lengths, steps) are never donated
         nbuf = program.num_buffers(cfg)
         donate = (
-            (1,) + tuple(range(3, 3 + nbuf))
+            (1,) + tuple(range(4, 4 + nbuf))
             if jax.default_backend() != "cpu"
             else ()
         )
         avals = self._abstract_inputs(
-            program, cfg, batch, seq_len, masked, params, shardings
+            program, cfg, batch, seq_len, masked, stepped, params, shardings
         )
         # XLA exposes no per-call "came from the persistent cache" signal;
-        # the hit counter moving across this compile is that signal
-        disk_before = disk_cache_hits()
+        # the hit counter moving across this compile is that signal.  Take
+        # the baseline *after* lowering: tracing evaluates `timesteps`
+        # grids eagerly (`ensure_compile_time_eval`), and those tiny
+        # eager compiles can themselves hit the persistent cache — a
+        # trace-time hit must not label the program compile "disk"
         t0 = time.perf_counter()
-        compiled = jax.jit(run, donate_argnums=donate).lower(*avals).compile()
+        lowered = jax.jit(run, donate_argnums=donate).lower(*avals)
+        disk_before = disk_cache_hits()
+        compiled = lowered.compile()
         wall = time.perf_counter() - t0
         source = "disk" if disk_cache_hits() > disk_before else "fresh"
         self._jitted[key] = compiled
@@ -780,12 +959,13 @@ class FusedExecutor:
         return compiled, source
 
     def _abstract_inputs(
-        self, program, cfg, batch, seq_len, masked, params, shardings
+        self, program, cfg, batch, seq_len, masked, stepped, params, shardings
     ):
         """``ShapeDtypeStruct`` avals matching exactly what
         :meth:`_run_chunk_locked` passes the compiled program: the params
         tree (shapes only — no device traffic), the fused ``x_init``, the
-        per-row ``lengths`` vector (masked buckets only, else None), and
+        per-row ``lengths`` vector (masked buckets only, else None), the
+        per-row :class:`StepMask` (stepped buckets only, else None), and
         the program's history buffers.  On a mesh every aval carries the
         same NamedSharding the run path commits its array to, so the AOT
         executable accepts those arrays without resharding."""
@@ -803,13 +983,34 @@ class FusedExecutor:
                 jnp.int32,
                 sharding=None if shardings is None else shardings.lengths,
             )
+        steps = None
+        if stepped:
+            # cfg.nfe is the bucket: the scan runs its step count, so the
+            # per-row grids span steps+1 knots
+            n_steps = program.steps_for_nfe(cfg.nfe, cfg)
+            steps = StepMask(
+                active_steps=sds(
+                    (batch,),
+                    jnp.int32,
+                    sharding=(
+                        None if shardings is None else shardings.active_steps
+                    ),
+                ),
+                ts=sds(
+                    (batch, n_steps + 1),
+                    jnp.float32,
+                    sharding=(
+                        None if shardings is None else shardings.step_ts
+                    ),
+                ),
+            )
         p_sharding = None if self._replicate is None else self._replicate.sharding
         p_avals = jax.tree.map(
             lambda a: sds(np.shape(a), jnp.result_type(a), sharding=p_sharding),
             params,
         )
         buffers = program.abstract_buffers(x, cfg, shardings)
-        return (p_avals, x, lengths, *buffers)
+        return (p_avals, x, lengths, steps, *buffers)
 
     # ---- ahead-of-time warmup ------------------------------------------
     def warmup(
@@ -830,7 +1031,11 @@ class FusedExecutor:
         Grid, per solver in ``solvers`` (default: the engine's default
         solver):
 
-        * **nfe**: ``nfes`` (default: the solver config's nfe).
+        * **nfe**: the nfe-bucket ladder when this solver's traffic
+          nfe-buckets (``nfe_masked``) — explicit ``nfes`` are folded onto
+          their buckets, since those are the only step counts a bucketed
+          stream ever compiles; otherwise ``nfes`` verbatim (default: the
+          solver config's nfe).
         * **seq**: the seq-bucket ladder when this solver's traffic
           seq-buckets (``seq_masked``); otherwise traffic groups by exact
           seq_len, so the caller names the expected lengths via
@@ -854,12 +1059,13 @@ class FusedExecutor:
         itself.
         """
         solver_list = tuple(solvers) if solvers else (self.solver_name,)
-        grid: list[tuple[str, SolverConfig, int, int, bool]] = []
+        grid: list[tuple[str, SolverConfig, int, int, bool, bool]] = []
         seen: set[Any] = set()
         for solver in solver_list:
             program = self.program_for(solver)  # unknown solver raises
             base = self.config_for(solver)
             masked = self.seq_masked(solver)
+            stepped = self.nfe_masked(solver)
             seqs = (
                 self.seq_buckets
                 if masked
@@ -877,7 +1083,18 @@ class FusedExecutor:
                 # exact-size traffic: warm the smallest legal batch
                 # (requests compile their own exact shapes at drain time)
                 batches = (round_to_dp(1, self.mesh),)
-            for nfe in tuple(nfes) if nfes else (base.nfe,):
+            if stepped:
+                # bucketed traffic only ever compiles the ladder's step
+                # counts — fold explicit nfes onto their buckets so the
+                # grid is |nfe_buckets| wide, not |nfes|
+                nfe_points = (
+                    tuple(sorted({self.bucket_nfe(n) for n in nfes}))
+                    if nfes
+                    else self.nfe_buckets
+                )
+            else:
+                nfe_points = tuple(nfes) if nfes else (base.nfe,)
+            for nfe in nfe_points:
                 cfg = dataclasses.replace(base, nfe=nfe)
                 for seq in seqs:
                     for b in batches:
@@ -890,7 +1107,7 @@ class FusedExecutor:
                             cfg,
                             dp=self.dp,
                         )
-                        point = (solver, cfg, b, seq, masked)
+                        point = (solver, cfg, b, seq, masked, stepped)
                         if point not in seen:
                             seen.add(point)
                             grid.append(point)
@@ -905,8 +1122,8 @@ class FusedExecutor:
         self._m_warmup_inflight.set(1)
         done = 0
         try:
-            for solver, cfg, b, seq, masked in grid:
-                key = (solver, cfg, b, seq, self.dp, masked)
+            for solver, cfg, b, seq, masked, stepped in grid:
+                key = (solver, cfg, b, seq, self.dp, masked, stepped)
                 with self._lock:
                     if key in self._jitted:
                         # already compiled — live traffic got there first
@@ -946,7 +1163,7 @@ class FusedExecutor:
             K.WALL_S: wall,
             "grid": [
                 {"solver": s, "batch": b, "seq_len": q, "nfe": c.nfe}
-                for s, c, b, q, _ in grid
+                for s, c, b, q, _, _ in grid
             ],
             **counts,
         }

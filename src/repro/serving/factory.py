@@ -53,6 +53,12 @@ class EngineConfig:
       exact-size, no fusion — the facade's shape).
     * ``seq_buckets`` — opt-in mixed-seq-len fusion ladder (``None`` =
       exact seq_len per fuse group).
+    * ``nfe_buckets`` — opt-in mixed-NFE fusion ladder (``None`` = exact
+      nfe per fuse group): requests whose ``nfe`` differ share one
+      compiled program that scans to the bucketed max step count under
+      per-row step masks, and the warmup grid / jit cache are bounded by
+      the ladder instead of by distinct request NFEs.  Requests above the
+      top bucket are rejected at submit, like the seq ladder.
     * ``max_batch`` / ``max_nfe`` / ``max_seq_len`` — per-request resource
       ceilings enforced at submit (HTTP 400 at the front door): a single
       wire request must not be able to force a multi-GB allocation or a
@@ -82,6 +88,7 @@ class EngineConfig:
     per_sample: bool = True
     batch_buckets: tuple[int, ...] | None = (1, 8, 64)
     seq_buckets: tuple[int, ...] | None = None
+    nfe_buckets: tuple[int, ...] | None = None
     max_batch: int | None = DEFAULT_MAX_BATCH
     max_nfe: int | None = DEFAULT_MAX_NFE
     max_seq_len: int | None = DEFAULT_MAX_SEQ_LEN
@@ -143,6 +150,7 @@ def build_engine(
         batch_buckets=cfg.batch_buckets,
         mesh=mesh,
         seq_buckets=cfg.seq_buckets,
+        nfe_buckets=cfg.nfe_buckets,
         metrics=metrics,
         max_batch=cfg.max_batch,
         max_nfe=cfg.max_nfe,
@@ -161,7 +169,11 @@ def warmup_kwargs(cfg: EngineConfig) -> dict | None:
     """
     if cfg.warmup == "none":
         return None
+    # with an nfe-bucket ladder the grid's step counts ARE the ladder
+    # (explicit warmup_nfes still fold onto their buckets in the executor);
+    # without one, traffic groups by exact nfe, so warm the config's
+    default_nfes = None if cfg.nfe_buckets else (cfg.nfe,)
     return {
-        "nfes": cfg.warmup_nfes or (cfg.nfe,),
+        "nfes": cfg.warmup_nfes or default_nfes,
         "seq_lens": cfg.warmup_seq_lens,
     }

@@ -30,9 +30,13 @@ PADDED_BATCH = "padded_batch"
 #: sequence length the compiled program ran at (seq bucket under seq
 #: bucketing, exact ``seq_len`` otherwise)
 PADDED_SEQ_LEN = "padded_seq_len"
+#: NFE budget the compiled program scanned to (NFE bucket under nfe
+#: bucketing, exact ``nfe`` otherwise) — the request's own steps beyond its
+#: exact NFE are inert pad steps under the per-row step mask
+PADDED_NFE = "padded_nfe"
 
 #: the engine-telemetry keys every ``SampleResult.info`` carries, in order
-INFO_KEYS = (WALL_S, LATENCY_S, PADDED_BATCH, PADDED_SEQ_LEN)
+INFO_KEYS = (WALL_S, LATENCY_S, PADDED_BATCH, PADDED_SEQ_LEN, PADDED_NFE)
 
 # ---- solver-diagnostic aux keys (merged into info, scoped per request) --
 #: per-step ERS error measure (batch mean under per-sample ERS), shape (nfe,)
@@ -43,6 +47,9 @@ DELTA_EPS_HISTORY_PER_SAMPLE = "delta_eps_history_per_sample"
 ERS_SELECTION_HISTORY = "ers_selection_history"
 #: full latent trajectory when ``return_trajectory`` is set
 TRAJECTORY = "trajectory"
+#: per-row model evaluations actually spent by the adaptive DPM-Solver
+#: (accept + reject), shape (B,) int32 — contrast with the nfe *budget*
+REALIZED_NFE = "realized_nfe"
 
 #: the documented solver-diagnostic keys, in order
 AUX_KEYS = (
@@ -50,6 +57,7 @@ AUX_KEYS = (
     DELTA_EPS_HISTORY_PER_SAMPLE,
     ERS_SELECTION_HISTORY,
     TRAJECTORY,
+    REALIZED_NFE,
 )
 
 # ---- AsyncBatchedSampler.stats() keys -----------------------------------

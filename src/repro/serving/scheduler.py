@@ -11,11 +11,13 @@ the standard continuous-batching shape for fixed-cost (known-NFE) solvers:
   :class:`~repro.serving.executor.SampleResult`;
 * requests land in per-(solver, seq, nfe) queues — the executor's group
   key, where ``seq`` is the request's seq *bucket* when the engine does
-  mixed-seq-len fusion and the exact ``seq_len`` otherwise.  Only
-  same-group requests can fuse into one compiled bucket: a mixed ``era`` /
-  ``ddim`` / ... stream batches per solver instead of cross-contaminating
-  a bucket, while (under seq bucketing) requests of *different* lengths
-  share a queue, a batch, and a compiled program;
+  mixed-seq-len fusion (the exact ``seq_len`` otherwise), and ``nfe`` is
+  likewise the request's NFE *bucket* when the engine does mixed-NFE
+  fusion (the exact ``nfe`` otherwise).  Only same-group requests can
+  fuse into one compiled bucket: a mixed ``era`` / ``ddim`` / ... stream
+  batches per solver instead of cross-contaminating a bucket, while
+  (under seq / nfe bucketing) requests of *different* lengths and step
+  budgets share a queue, a batch, and a compiled program;
 * a background drain thread launches a queue when it reaches the policy's
   target bucket occupancy, or when its oldest request has waited
   ``max_wait_ms`` (deadline promotion — a lone request can never starve);
@@ -224,7 +226,8 @@ class AsyncBatchedSampler:
         self._cv = threading.Condition()
         # fuse queues keyed by the executor's group key (solver, seq, nfe):
         # only requests that may share a compiled bucket share a queue (seq
-        # is the seq bucket under mixed-seq-len fusion, else exact seq_len)
+        # is the seq bucket under mixed-seq-len fusion, else exact seq_len;
+        # nfe is the NFE bucket under mixed-NFE fusion, else exact nfe)
         self._queues: dict[
             tuple[str, int, int], deque[tuple[QueueItem, Future]]
         ] = {}

@@ -27,6 +27,16 @@ scheduler queues key on the seq *bucket*, so requests of different lengths
 share fused batches (right-padded + length-masked), and every request's x0
 still matches its exact-shape solo run bit-for-bit under any arrival
 interleaving (see also `tests/test_seq_bucketing.py`).
+
+PR-10 extends it to **mixed-NFE streams**: with `nfe_buckets` the queues
+key on the NFE *bucket*, so 10/18/25-NFE requests share step-masked fused
+batches.  The step-masked contract is composition-shaped: a request's x0
+depends only on the compiled batch shape it ran at — never on its
+batch-mates' values, NFEs, or row order — so async results are bitwise
+equal to the sync drain whenever the scheduler formed the same batch
+bucket, and within float tolerance (last-ulp transcendental rounding on
+batch-shaped time columns) when it formed a different one (see also
+`tests/test_nfe_bucketing.py`).
 """
 
 import random
@@ -66,30 +76,38 @@ def _requests(n, seq_len, nfe, seed0, mixed=False):
     ]
 
 
-def _sync_x0(reqs, mesh=None, seq_buckets=None):
-    engine = BatchedSampler(
+def _engine(mesh=None, seq_buckets=None, nfe_buckets=None):
+    return BatchedSampler(
         OracleDenoiser(ANALYTIC),
         ANALYTIC.schedule,
         batch_buckets=(2, 4, 8),
         mesh=mesh,
         seq_buckets=seq_buckets,
+        nfe_buckets=nfe_buckets,
     )
+
+
+def _sync_results(reqs, mesh=None, seq_buckets=None, nfe_buckets=None):
+    engine = _engine(mesh, seq_buckets, nfe_buckets)
     tickets = [engine.submit(r) for r in reqs]
     results = engine.drain(params=None)
-    return [np.asarray(results[t].x0) for t in tickets]
+    return [results[t] for t in tickets]
 
 
-def _async_x0(reqs, delay_seed, mesh=None, seq_buckets=None):
+def _sync_x0(reqs, mesh=None, seq_buckets=None):
+    return [
+        np.asarray(r.x0)
+        for r in _sync_results(reqs, mesh=mesh, seq_buckets=seq_buckets)
+    ]
+
+
+def _async_results(
+    reqs, delay_seed, mesh=None, seq_buckets=None, nfe_buckets=None
+):
     """Run through the scheduler with racing client threads and randomized
     submission delays — arbitrary arrival interleavings and batch
     compositions."""
-    engine = BatchedSampler(
-        OracleDenoiser(ANALYTIC),
-        ANALYTIC.schedule,
-        batch_buckets=(2, 4, 8),
-        mesh=mesh,
-        seq_buckets=seq_buckets,
-    )
+    engine = _engine(mesh, seq_buckets, nfe_buckets)
     rng = random.Random(delay_seed)
     futures: dict[int, object] = {}
     lock = threading.Lock()
@@ -116,7 +134,16 @@ def _async_x0(reqs, delay_seed, mesh=None, seq_buckets=None):
         for t in threads:
             t.join()
         out = {i: f.result(timeout=120) for i, f in futures.items()}
-    return [np.asarray(out[i].x0) for i in range(len(reqs))]
+    return [out[i] for i in range(len(reqs))]
+
+
+def _async_x0(reqs, delay_seed, mesh=None, seq_buckets=None):
+    return [
+        np.asarray(r.x0)
+        for r in _async_results(
+            reqs, delay_seed, mesh=mesh, seq_buckets=seq_buckets
+        )
+    ]
 
 
 def _solo_x0(reqs, mesh=None):
@@ -234,6 +261,98 @@ def test_x0_bit_identical_for_mixed_seq_len_streams(
             solo[i],
             err_msg=f"bucketed async vs exact-shape solo diverged for "
             f"seq_len {r.seq_len} seed {r.seed} (n={n}, nfe={r.nfe})",
+        )
+
+
+NFE_BUCKETS = (18, 32)
+NFE_STREAM = (10, 18, 25)  # 10/18 share the 18-bucket; 25 rides the 32
+
+
+def _assert_composition_shaped(asyn, sync, label):
+    """The step-masked determinism contract: bitwise whenever the
+    scheduler formed the same batch bucket as the sync drain, float-
+    tolerance (last-ulp transcendental rounding) when it formed a
+    different one."""
+    for i, (a, s) in enumerate(zip(asyn, sync)):
+        if a.padded_batch == s.padded_batch:
+            np.testing.assert_array_equal(
+                np.asarray(a.x0), np.asarray(s.x0),
+                err_msg=f"{label}: async vs sync diverged at identical "
+                f"batch bucket {a.padded_batch} (request {i})",
+            )
+        else:
+            np.testing.assert_allclose(
+                np.asarray(a.x0), np.asarray(s.x0), atol=1e-6,
+                err_msg=f"{label}: async (bucket {a.padded_batch}) vs "
+                f"sync (bucket {s.padded_batch}) exceeded the cross-"
+                f"composition tolerance (request {i})",
+            )
+
+
+@settings(max_examples=3, deadline=None)
+@given(
+    st.integers(min_value=3, max_value=6),       # co-arriving requests
+    st.integers(min_value=2, max_value=8),       # seq_len
+    st.integers(min_value=0, max_value=10_000),  # request seed base
+    st.integers(min_value=0, max_value=10_000),  # arrival-delay seed
+)
+def test_x0_deterministic_for_mixed_nfe_streams(n, seq_len, seed0, delay_seed):
+    """The wall with requests of *different* NFEs fusing into shared
+    step-masked buckets: the scheduler queues key on the NFE bucket, so
+    any arrival interleaving can mix 10/18/25-NFE requests in a chunk —
+    and no request's x0 may depend on which NFEs its batch-mates brought,
+    nor on how far its steps were padded."""
+    reqs = [
+        SampleRequest(
+            batch=1,
+            seq_len=seq_len,
+            nfe=NFE_STREAM[i % len(NFE_STREAM)],
+            seed=seed0 + i,
+        )
+        for i in range(n)
+    ]
+    sync = _sync_results(reqs, nfe_buckets=NFE_BUCKETS)
+    asyn = _async_results(reqs, delay_seed, nfe_buckets=NFE_BUCKETS)
+    for i, r in enumerate(reqs):
+        # every request rode a bucketed (step-masked) program
+        assert asyn[i].padded_nfe in NFE_BUCKETS, r.nfe
+        assert sync[i].padded_nfe == asyn[i].padded_nfe
+    _assert_composition_shaped(
+        asyn, sync, f"mixed-NFE (n={n}, seq_len={seq_len}, seed0={seed0})"
+    )
+    # and the scalar-time solo runs anchor correctness to float tolerance
+    solo = _solo_x0(reqs)
+    for i, r in enumerate(reqs):
+        np.testing.assert_allclose(
+            np.asarray(asyn[i].x0), solo[i], atol=1e-6,
+            err_msg=f"bucketed async vs exact-NFE solo diverged for "
+            f"nfe {r.nfe} seed {r.seed}",
+        )
+
+
+def test_mixed_nfe_arrival_determinism_on_mesh(mesh8):
+    """The mixed-NFE wall on the 8-virtual-device mesh: step-mask pspecs
+    ride the carry, and scheduler timing must not leak into results when
+    the step-masked batch is sharded across devices."""
+    reqs = [
+        SampleRequest(
+            batch=1, seq_len=6, nfe=NFE_STREAM[i % len(NFE_STREAM)],
+            seed=300 + i,
+        )
+        for i in range(6)
+    ]
+    sync_mesh = _sync_results(reqs, mesh=mesh8, nfe_buckets=NFE_BUCKETS)
+    async_mesh = _async_results(
+        reqs, delay_seed=5, mesh=mesh8, nfe_buckets=NFE_BUCKETS
+    )
+    _assert_composition_shaped(async_mesh, sync_mesh, "mesh mixed-NFE")
+    single = _sync_results(reqs, nfe_buckets=NFE_BUCKETS)
+    for i, r in enumerate(reqs):
+        np.testing.assert_allclose(
+            np.asarray(async_mesh[i].x0), np.asarray(single[i].x0),
+            atol=1e-5,
+            err_msg=f"mesh vs single-device mixed-NFE diverged for "
+            f"nfe {r.nfe} seed {r.seed}",
         )
 
 

@@ -162,8 +162,65 @@ def test_warmup_kwargs_follow_engine_config():
         EngineConfig(warmup="grid", nfe=8, warmup_seq_lens=(16,))
     )
     assert kw == {"nfes": (8,), "seq_lens": (16,)}
+    # with an NFE ladder the ladder drives the warmup grid, not the
+    # config's single nfe — warmup defaults to |nfe_buckets| step counts
+    kw = warmup_kwargs(EngineConfig(warmup="grid", nfe=8, nfe_buckets=(8, 16)))
+    assert kw == {"nfes": None, "seq_lens": None}
     with pytest.raises(ValueError, match="warmup"):
         build_engine(None, None, EngineConfig(warmup="bogus"))
+
+
+# ---------------------------------------------------------------------------
+# NFE-bucketed warmup: the grid is |nfe_buckets| wide, not |nfes|
+# ---------------------------------------------------------------------------
+
+NFE_BUCKETS = (8, 16)
+
+
+def _nfe_bucketed_engine(analytic):
+    return BatchedSampler(
+        OracleDenoiser(analytic),
+        analytic.schedule,
+        batch_buckets=BATCHES,
+        seq_buckets=SEQS,
+        nfe_buckets=NFE_BUCKETS,
+    )
+
+
+def test_warmup_grid_bounded_by_nfe_buckets(analytic):
+    eng = _nfe_bucketed_engine(analytic)
+    report = eng.warmup(None)
+    assert report["programs"] == len(BATCHES) * len(SEQS) * len(NFE_BUCKETS)
+    assert {g["nfe"] for g in report["grid"]} == set(NFE_BUCKETS)
+
+    # explicit nfes fold onto their buckets: eight distinct traffic NFEs
+    # warm |nfe_buckets| step counts, not eight
+    eng2 = _nfe_bucketed_engine(analytic)
+    report2 = eng2.warmup(None, nfes=(5, 6, 7, 8, 9, 12, 14, 16))
+    assert report2["programs"] == (
+        len(BATCHES) * len(SEQS) * len(NFE_BUCKETS)
+    )
+    assert {g["nfe"] for g in report2["grid"]} == set(NFE_BUCKETS)
+
+
+def test_warmed_engine_serves_mixed_nfes_memory_hit_only(analytic):
+    eng = _nfe_bucketed_engine(analytic)
+    eng.warmup(None)
+    fresh_after_warmup = eng.compile_stats()["fresh"]
+    futures = []
+    for i, (nfe, seq) in enumerate(
+        [(5, 3), (8, 4), (10, 7), (16, 8), (6, 5), (13, 2)]
+    ):
+        _, fut = eng.submit_with_future(
+            SampleRequest(batch=1, seq_len=seq, nfe=nfe, seed=i)
+        )
+        futures.append((fut, nfe))
+        eng.drain(None)
+    for fut, nfe in futures:
+        res = fut.result()
+        assert res.padded_nfe in NFE_BUCKETS and res.padded_nfe >= nfe
+    # post-warmup mixed-NFE serving is pure memory hits
+    assert eng.compile_stats()["fresh"] == fresh_after_warmup
 
 
 # ---------------------------------------------------------------------------
